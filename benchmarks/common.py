@@ -1,0 +1,36 @@
+"""Shared benchmark plumbing: CSV emission + result caching."""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def cache_json(key: str, fn, force: bool = False):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    p = RESULTS / f"{key}.json"
+    if p.exists() and not force:
+        return json.loads(p.read_text())
+    out = fn()
+    p.write_text(json.dumps(out, indent=2))
+    return out
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall-time of fn(*args) in microseconds."""
+    for _ in range(warmup):
+        fn(*args)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6

@@ -1,0 +1,46 @@
+"""Paper Fig. 2: PE utilization vs T_M for different systolic-array dims.
+
+util(T_M) = T_M / (2*rows + T_M + cols - 1) on the BASE design; verified
+against the cycle simulator (not just the closed form).
+"""
+
+from __future__ import annotations
+
+import sys
+sys.path.insert(0, "src")
+
+from repro.core.designs import EngineConfig
+from repro.core.isa import Instr, Op
+from repro.core.timing import PipelineSimulator, serial_mm_latency
+
+from common import emit  # type: ignore
+
+
+DIMS = [(4, 4), (8, 8), (16, 16), (32, 16), (32, 32)]
+TMS = [1, 2, 4, 8, 16, 32, 64, 128, 256]
+
+
+def run() -> dict:
+    table = {}
+    for rows, cols in DIMS:
+        cfg = EngineConfig(name=f"sa{rows}x{cols}", rows=rows, cols=cols)
+        for tm in TMS:
+            sim = PipelineSimulator(cfg)
+            res = sim.run([Instr(Op.MM, dst=0, src1=1, src2=2,
+                                 tm=tm, tk=rows, tn=cols)])
+            closed = tm / serial_mm_latency(rows, cols, tm)
+            assert abs(res.utilization - closed) < 1e-9
+            table[f"{rows}x{cols}_tm{tm}"] = round(res.utilization, 4)
+    return table
+
+
+def main() -> None:
+    table = run()
+    for k, v in table.items():
+        emit(f"fig2_util_{k}", 0.0, f"util={v}")
+    # the paper's qualitative claim: larger T_M -> utilization -> 1
+    assert table["32x16_tm256"] > 0.7 > table["32x16_tm16"]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Paper Fig. 5: normalized runtime of the RASA designs on Table I layers.
+
+Reports per-layer normalized runtimes + the averages the paper quotes
+(PIPE -15.7%, WLBP -30.9%, DB-WLS -78.1%, DM-WLBP -55.5%, DMDB-WLS -79.2%),
+for the Algorithm-1 register policy and the two bracketing policies
+(EXPERIMENTS.md §Fig5 discusses the deviation).
+"""
+
+from __future__ import annotations
+
+import sys
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import TABLE_I, normalized_runtime
+from repro.core.area import PAPER_RUNTIME_REDUCTION
+from repro.core.tiling import ALG1_POLICY, LOW_REUSE_POLICY, MAX_REUSE_POLICY
+
+from common import cache_json, emit, timeit  # type: ignore
+
+DESIGNS = ["RASA-PIPE", "RASA-WLBP", "RASA-DB-WLS", "RASA-DM-PIPE",
+           "RASA-DM-WLBP", "RASA-DMDB-WLS"]
+POLICIES = {"alg1": ALG1_POLICY, "low_reuse": LOW_REUSE_POLICY,
+            "max_reuse": MAX_REUSE_POLICY}
+
+
+def run(force: bool = False) -> dict:
+    def compute():
+        out = {}
+        for pol_name, pol in POLICIES.items():
+            for layer, spec in TABLE_I.items():
+                for design in DESIGNS:
+                    out[f"{pol_name}/{layer}/{design}"] = normalized_runtime(
+                        spec, design, pol)
+        return out
+    return cache_json("fig5_runtime", compute, force=force)
+
+
+def main() -> None:
+    us = timeit(lambda: normalized_runtime(TABLE_I["DLRM-2"], "RASA-PIPE"),
+                warmup=1, iters=1)
+    table = run()
+    for key, v in sorted(table.items()):
+        emit(f"fig5_{key}", us, f"norm_runtime={v:.3f}")
+    print("\n# averages over Table I (normalized runtime; paper in parens)")
+    for design in DESIGNS:
+        for pol in POLICIES:
+            avg = np.mean([table[f"{pol}/{l}/{design}"] for l in TABLE_I])
+            paper = PAPER_RUNTIME_REDUCTION.get(design)
+            ref = f" (paper {1-paper:.3f})" if paper and pol == "alg1" else ""
+            print(f"# {design:16s} policy={pol:10s} avg={avg:.3f}{ref}")
+
+
+if __name__ == "__main__":
+    main()

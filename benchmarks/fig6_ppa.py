@@ -1,0 +1,36 @@
+"""Paper Fig. 6 + §V area/energy: performance-per-area and energy
+efficiency of the RASA-Data options (published physical constants +
+simulated runtimes; reproduces 4.38x / 2.19x / 4.59x)."""
+
+from __future__ import annotations
+
+import sys
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import TABLE_I, normalized_runtime
+from repro.core.area import (area_mm2, energy_efficiency,
+                             PAPER_ENERGY_EFFICIENCY, perf_per_area)
+
+from common import emit  # type: ignore
+
+BEST_CONTROL = {"DB": "RASA-DB-WLS", "DM": "RASA-DM-WLBP",
+                "DMDB": "RASA-DMDB-WLS"}
+
+
+def main() -> None:
+    for data_opt, design in BEST_CONTROL.items():
+        norm = np.mean([normalized_runtime(spec, design)
+                        for spec in TABLE_I.values()])
+        speedup = 1.0 / norm
+        ppa = perf_per_area(design, speedup)
+        ee = energy_efficiency(design, speedup)
+        emit(f"fig6_{design}", 0.0,
+             f"area_mm2={area_mm2(design):.3f};speedup={speedup:.2f};"
+             f"ppa={ppa:.2f};energy_eff={ee:.2f};"
+             f"paper_ee={PAPER_ENERGY_EFFICIENCY[data_opt]}")
+
+
+if __name__ == "__main__":
+    main()

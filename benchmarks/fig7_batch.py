@@ -1,0 +1,40 @@
+"""Paper Fig. 7: batch-size sensitivity of RASA-DMDB-WLS.
+
+Claims reproduced: batches 1..16 cost the same (16 is the smallest work
+granularity); large batches approach the 16/95 = 0.168 asymptote.
+"""
+
+from __future__ import annotations
+
+import sys
+sys.path.insert(0, "src")
+
+from repro.core import batch_sweep, normalized_runtime, simulate
+from repro.core.area import PAPER_BEST_NORMALIZED_RUNTIME
+
+from common import cache_json, emit  # type: ignore
+
+
+def run(force: bool = False) -> dict:
+    def compute():
+        sweep = batch_sweep(nin=1024, non=1024,
+                            batches=(1, 2, 4, 8, 16, 32, 64, 128, 256,
+                                     512, 1024, 2048))
+        return {str(b): normalized_runtime(spec, "RASA-DMDB-WLS")
+                for b, spec in sweep.items()}
+    return cache_json("fig7_batch", compute, force=force)
+
+
+def main() -> None:
+    table = run()
+    for b, v in table.items():
+        emit(f"fig7_batch{b}", 0.0, f"norm_runtime={v:.3f}")
+    small = [table[str(b)] for b in (1, 2, 4, 8, 16)]
+    assert max(small) - min(small) < 1e-9, "batches <=16 must cost the same"
+    assert abs(table["2048"] - PAPER_BEST_NORMALIZED_RUNTIME) < 0.02
+    print(f"# asymptote: {table['2048']:.3f} (paper bound "
+          f"{PAPER_BEST_NORMALIZED_RUNTIME:.3f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,209 @@
+"""Perf hillclimb harness: measure roofline terms for config VARIANTS of a
+cell without touching the cached baseline artifacts.
+
+    PYTHONPATH=src python benchmarks/hillclimb.py --arch grok-1-314b \
+        --shape train_4k --variant fused_gate_up --variant remat_dots
+
+Each variant is a named config transform; the harness compiles the full
+cell (memory proof) + unrolled d0/d_unit (accurate flops/bytes/collectives)
+and prints the three terms next to the baseline.  Results go to
+benchmarks/results/hillclimb/<cell>__<variant>.json.
+"""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+
+RESULTS = Path(__file__).resolve().parent / "results" / "hillclimb"
+DRYRUN = Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+# ---------------------------------------------------------------- variants
+
+def v_baseline(cfg):
+    return cfg
+
+
+def v_fused_gate_up(cfg):
+    return dataclasses.replace(
+        cfg, model=dataclasses.replace(cfg.model, fuse_gate_up=True))
+
+
+def v_remat_dots(cfg):
+    return dataclasses.replace(
+        cfg, parallel=dataclasses.replace(cfg.parallel, remat="dots"))
+
+
+def v_serve_tp(cfg):
+    return dataclasses.replace(
+        cfg, parallel=dataclasses.replace(cfg.parallel,
+                                          serve_param_sharding="tp"))
+
+
+def v_microbatch4(cfg):
+    return dataclasses.replace(
+        cfg, train=dataclasses.replace(cfg.train, microbatches=4))
+
+
+def v_no_sp(cfg):
+    # drop sequence parallelism of the residual stream: fewer per-layer
+    # all-gathers at the cost of bigger carries (memory <-> collective)
+    return cfg  # marker; applied via env knob below
+
+
+def v_cap1(cfg):
+    m = cfg.model
+    return dataclasses.replace(
+        cfg, model=dataclasses.replace(
+            m, moe=dataclasses.replace(m.moe, capacity_factor=1.0)))
+
+
+def v_groups64(cfg):
+    m = cfg.model
+    return dataclasses.replace(
+        cfg, model=dataclasses.replace(
+            m, moe=dataclasses.replace(m.moe, dispatch_groups=64)))
+
+
+def v_ssd_chunk128(cfg):
+    import dataclasses as dc
+    m = cfg.model
+    return dc.replace(cfg, model=dc.replace(
+        m, ssm=dc.replace(m.ssm, chunk=128)))
+
+
+def v_ssd_chunk64(cfg):
+    import dataclasses as dc
+    m = cfg.model
+    return dc.replace(cfg, model=dc.replace(
+        m, ssm=dc.replace(m.ssm, chunk=64)))
+
+
+def v_opt_bf16(cfg):
+    return dataclasses.replace(
+        cfg, parallel=dataclasses.replace(cfg.parallel,
+                                          opt_state_dtype="bfloat16"))
+
+
+VARIANTS = {
+    "baseline": v_baseline,
+    "fused_gate_up": v_fused_gate_up,
+    "remat_dots": v_remat_dots,
+    "serve_tp": v_serve_tp,
+    "microbatch4": v_microbatch4,
+    "moe_cap1": v_cap1,
+    "moe_groups64": v_groups64,
+    "ssd_chunk128": v_ssd_chunk128,
+    "ssd_chunk64": v_ssd_chunk64,
+    "opt_bf16": v_opt_bf16,
+}
+
+
+def measure(arch: str, shape: str, variant: str, full: bool = True) -> dict:
+    """Compile the variant cell + reduced-depth artifacts; return terms."""
+    from repro.config import SHAPES
+    from repro.configs import get_config
+    from repro.distributed.sharding import mesh_context
+    from repro.launch.dryrun import build_step, parse_collectives
+    from repro.launch.mesh import make_production_mesh
+    from repro.roofline.analysis import analyze_cell
+
+    transform = VARIANTS[variant]
+    seq_len, batch, kind = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=False)
+
+    def compile_cfg(cfg):
+        with mesh_context(mesh, cfg.parallel) as ctx:
+            fn, args, sh, don = build_step(cfg, kind, seq_len, batch, ctx)
+            c = jax.jit(fn, in_shardings=sh,
+                        donate_argnums=don).lower(*args).compile()
+            mem = c.memory_analysis()
+            cost = c.cost_analysis()
+            colls = parse_collectives(c.as_text())
+        return {
+            "memory": {"peak_bytes_per_device":
+                       mem.argument_size_in_bytes + mem.output_size_in_bytes
+                       + mem.temp_size_in_bytes - mem.alias_size_in_bytes,
+                       "temp_bytes_per_device": mem.temp_size_in_bytes},
+            "cost_per_device": {"flops": cost.get("flops", 0.0),
+                                "bytes_accessed": cost.get("bytes accessed", 0.0)},
+            "collectives_per_device_bytes": colls,
+        }
+
+    base_cfg = get_config(arch)
+    cfg = transform(base_cfg)
+    unit = (cfg.model.hybrid.attn_every
+            if cfg.model.family == "hybrid" else 1)
+
+    def depth_cfg(c, depth):
+        return dataclasses.replace(
+            c,
+            model=dataclasses.replace(c.model, n_layers=depth),
+            parallel=dataclasses.replace(c.parallel, scan_layers=False),
+            engine=dataclasses.replace(c.engine, attn_q_chunk=seq_len,
+                                       attn_kv_chunk=seq_len,
+                                       ce_chunk=seq_len, unroll_ssd=True))
+
+    out = {"arch": arch, "shape": shape, "variant": variant,
+           "devices": 256, "unit_layers": unit,
+           "total_layers": cfg.model.n_layers}
+    t0 = time.time()
+    if full:
+        out.update(compile_cfg(cfg))
+    d0 = compile_cfg(depth_cfg(cfg, 0))
+    du = compile_cfg(depth_cfg(cfg, unit))
+    out["elapsed_s"] = round(time.time() - t0, 1)
+
+    cell = {**out, "cost_per_device": out.get(
+        "cost_per_device", d0["cost_per_device"]),
+        "memory": out.get("memory", d0["memory"]),
+        "collectives_per_device_bytes": out.get(
+            "collectives_per_device_bytes", {})}
+    d0f = {"cost_per_device": d0["cost_per_device"],
+           "collectives_per_device_bytes": d0["collectives_per_device_bytes"]}
+    duf = {"cost_per_device": du["cost_per_device"],
+           "collectives_per_device_bytes": du["collectives_per_device_bytes"]}
+    r = analyze_cell(cell, d0=d0f, du=duf)
+    out["roofline"] = {
+        "compute_s": r.compute_s, "memory_s": r.memory_s,
+        "collective_s": r.collective_s, "dominant": r.dominant,
+        "step_time_s": r.step_time_s, "mfu": r.mfu,
+        "useful_flops_ratio": r.useful_flops_ratio,
+    }
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"{arch}__{shape}__{variant}.json").write_text(
+        json.dumps(out, indent=2))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", action="append", default=[])
+    ap.add_argument("--skip-full", action="store_true",
+                    help="skip the full-depth compile (terms only)")
+    args = ap.parse_args()
+    for v in (args.variant or ["baseline"]):
+        r = measure(args.arch, args.shape, v, full=not args.skip_full)
+        rf = r["roofline"]
+        mem = r.get("memory", {}).get("peak_bytes_per_device", 0) / 2**30
+        print(f"{args.arch} x {args.shape} [{v}]: "
+              f"compute {rf['compute_s']:.3f}s  memory {rf['memory_s']:.3f}s  "
+              f"coll {rf['collective_s']:.3f}s  -> {rf['dominant']} "
+              f"(step {rf['step_time_s']:.3f}s, MFU {rf['mfu']:.1%}, "
+              f"mem {mem:.1f} GiB)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Kernel-level benchmark: RASA-scheduled Pallas GEMM schedules.
+
+On CPU the kernels run in interpret mode (semantics, not speed), so the
+*performance* signal here is the DMA cost model (schedule_cost) -- bytes
+moved per schedule -- which is what the perf loop optimizes.  Wall-times
+of the jnp reference are included as the call-overhead baseline.
+"""
+
+from __future__ import annotations
+
+import sys
+sys.path.insert(0, "src")
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.kernels import GemmBlocks, SCHEDULES, rasa_matmul, schedule_cost
+from repro.kernels.ref import ref_matmul
+
+from common import emit, timeit  # type: ignore
+
+SHAPES = [(1024, 1024, 1024), (4096, 2048, 2048), (16384, 6144, 6144)]
+
+
+def main() -> None:
+    blocks = GemmBlocks(256, 512, 256)
+    for (m, k, n) in SHAPES:
+        for sched in SCHEDULES:
+            c = schedule_cost(m, k, n, blocks, sched)
+            emit(f"kernel_gemm_{m}x{k}x{n}_{sched}", 0.0,
+                 f"bytes={c['total_bytes']};ai={c['arithmetic_intensity']:.1f}")
+    # numerics spot check + reference wall time (interpret mode)
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(256, 256)).astype(jnp.bfloat16)
+    b = rng.normal(size=(256, 256)).astype(jnp.bfloat16)
+    us = timeit(lambda: np.asarray(
+        rasa_matmul(a, b, schedule="wls", blocks=GemmBlocks(128, 128, 128))))
+    ref = np.asarray(ref_matmul(a, b))
+    got = np.asarray(rasa_matmul(a, b, schedule="wls",
+                                 blocks=GemmBlocks(128, 128, 128)))
+    err = float(np.abs(got - ref).max() / np.abs(ref).max())
+    emit("kernel_gemm_interpret_256", us, f"relerr={err:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Beyond-paper: project the ten assigned LM architectures onto a
+RASA-equipped CPU.
+
+For each architecture, collect its per-layer GEMMs (decode batch=1 and
+batch=16), lower them through the register-aware tiler, and compare BASE
+vs RASA-DMDB-WLS cycles -- i.e. "how much does the paper's technique help
+a 2024-era LLM on a CPU matrix engine".  The small-expert granite MoE
+(d_ff_expert=512) is the register-limited small-T_M regime where RASA's
+WL-skip matters most.
+"""
+
+from __future__ import annotations
+
+import sys
+sys.path.insert(0, "src")
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.core import GemmSpec, simulate
+
+from common import cache_json, emit  # type: ignore
+
+
+def layer_gemms(arch: str, batch: int) -> list[GemmSpec]:
+    m = get_config(arch).model
+    d, hd = m.d_model, m.resolved_head_dim
+    # cap the enormous dims: the projection's point is the relative
+    # BASE -> RASA speedup in the small-T_M decode regime, which is
+    # insensitive to K/N beyond a few thousand (simulation cost isn't)
+    cap = 4096
+    d = min(d, cap)
+    out = []
+    if m.n_heads:
+        out.append(GemmSpec(f"{arch}-qkv", batch, d,
+                            min((m.n_heads + 2 * m.n_kv_heads) * hd, cap)))
+        out.append(GemmSpec(f"{arch}-wo", batch, min(m.n_heads * hd, cap), d))
+    if m.moe is not None:
+        # top_k experts active per token
+        for i in range(min(m.moe.top_k, 4)):
+            out.append(GemmSpec(f"{arch}-exp{i}-up", batch, d,
+                                min(m.moe.d_ff_expert, cap)))
+            out.append(GemmSpec(f"{arch}-exp{i}-dn", batch,
+                                min(m.moe.d_ff_expert, cap), d))
+    elif m.d_ff:
+        out.append(GemmSpec(f"{arch}-ff-up", batch, d, min(m.d_ff, cap)))
+        out.append(GemmSpec(f"{arch}-ff-dn", batch, min(m.d_ff, cap), d))
+    if m.ssm is not None:
+        di = min(m.ssm.expand * d, cap)
+        out.append(GemmSpec(f"{arch}-ssm-in", batch, d, 2 * di))
+        out.append(GemmSpec(f"{arch}-ssm-out", batch, di, d))
+    return out
+
+
+def run(force: bool = False) -> dict:
+    def compute():
+        table = {}
+        for arch in ARCH_NAMES:
+            for batch in (1, 16):
+                base = rasa = 0.0
+                for spec in layer_gemms(arch, batch):
+                    base += simulate(spec, "BASE").cycles
+                    rasa += simulate(spec, "RASA-DMDB-WLS").cycles
+                table[f"{arch}_b{batch}"] = {
+                    "base_cycles": base, "rasa_cycles": rasa,
+                    "speedup": base / max(rasa, 1e-9)}
+        return table
+    return cache_json("rasa_llm_projection", compute, force=force)
+
+
+def main() -> None:
+    table = run()
+    for key, v in table.items():
+        emit(f"rasa_llm_{key}", 0.0,
+             f"speedup={v['speedup']:.2f};base={v['base_cycles']:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Benchmark driver: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run``
+prints ``name,us_per_call,derived`` CSV lines per benchmark.
+"""
+
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+
+def main() -> None:
+    import fig2_utilization
+    import fig5_runtime
+    import fig6_ppa
+    import fig7_batch
+    import kernel_bench
+    import rasa_llm_projection
+    import roofline_report
+
+    for mod in (fig2_utilization, fig5_runtime, fig6_ppa, fig7_batch,
+                kernel_bench, rasa_llm_projection, roofline_report):
+        print(f"\n## {mod.__name__}")
+        mod.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps
+with checkpointing, fault tolerance, and the production train step.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+
+(~100M params: mamba2-130m at full config is CPU-trainable at short seq;
+use --arch to pick any other architecture's smoke config.)
+"""
+
+import argparse
+import sys
+sys.path.insert(0, "src")
+
+import dataclasses
+import jax
+
+from repro.config import TrainConfig
+from repro.configs import get_config
+from repro.data import SyntheticLMDataset
+from repro.models import build_model
+from repro.training import LoopConfig, TrainLoop, init_train_state
+from repro.training.step import build_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-130m")
+    ap.add_argument("--full", action="store_true",
+                    help="full config (default: 100M-scale = mamba2-130m full)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    # mamba2-130m's FULL config is ~130M params -- the "train a ~100M model
+    # for a few hundred steps" driver; other archs default to smoke configs.
+    smoke = not (args.full or args.arch == "mamba2-130m")
+    cfg = get_config(args.arch, smoke=smoke)
+    cfg = dataclasses.replace(cfg, train=TrainConfig(
+        global_batch=args.batch, seq_len=args.seq, lr=3e-4,
+        total_steps=args.steps, warmup_steps=max(args.steps // 20, 1)))
+    print(f"arch={cfg.model.name} params~{cfg.model.param_count()/1e6:.0f}M")
+
+    api = build_model(cfg)
+    data = SyntheticLMDataset(cfg.model, seq_len=args.seq,
+                              global_batch=args.batch, seed=0)
+    state = init_train_state(api, jax.random.key(0))
+    step_fn = jax.jit(build_train_step(api), donate_argnums=(0,))
+
+    loop = TrainLoop(
+        step_fn=step_fn, state=state, batch_fn=data.batch,
+        cfg=LoopConfig(total_steps=args.steps, checkpoint_every=50,
+                       checkpoint_dir=args.ckpt, handle_sigterm=True))
+    loop.run()
+    losses = [m["loss"] for m in loop.metrics_history]
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} over {len(losses)} steps")
+
+
+if __name__ == "__main__":
+    main()

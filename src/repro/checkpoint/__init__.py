@@ -1,0 +1,7 @@
+"""Checkpointing: async, atomic, sharding-aware."""
+
+from .store import (CheckpointManager, latest_step, restore_checkpoint,
+                    save_checkpoint)
+
+__all__ = ["CheckpointManager", "latest_step", "restore_checkpoint",
+           "save_checkpoint"]

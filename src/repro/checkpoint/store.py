@@ -1,0 +1,175 @@
+"""Fault-tolerant checkpoint store.
+
+Properties needed at 1000-node scale, all implemented here:
+  * atomic      -- write to <dir>.tmp-<uuid>, fsync, rename; a crashed save
+                   never corrupts the latest checkpoint;
+  * async       -- device->host transfer happens synchronously (cheap), the
+                   file write runs on a background thread so the train loop
+                   overlaps step N+1 with persisting step N;
+  * resharding  -- restore() takes target shardings; a checkpoint written on
+                   a (2,16,16) mesh restores onto (16,16) or a 1-device CPU
+                   mesh (elastic restart after node loss);
+  * integrity   -- per-leaf crc32 in the manifest, verified on load;
+  * retention   -- keep the newest K checkpoints (never deleting the one
+                   being written).
+
+Format: one .npz per checkpoint (host-gathered leaves) + manifest.json.
+On real multi-host pods each host would write only its address-space slice;
+the single-process container gathers fully -- the interface (save/restore
+via shardings) is the multi-host one.
+"""
+
+from __future__ import annotations
+
+import concurrent.futures
+import json
+import os
+import shutil
+import threading
+import uuid
+import zlib
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves = [], []
+    for path, leaf in flat:
+        names.append(jax.tree_util.keystr(path))
+        leaves.append(leaf)
+    return names, leaves, treedef
+
+
+def save_checkpoint(directory: str | Path, step: int, state: Any) -> Path:
+    """Synchronous atomic save; returns the final checkpoint dir."""
+    directory = Path(directory)
+    final = directory / f"step_{step:08d}"
+    tmp = directory / f".tmp-{uuid.uuid4().hex[:8]}"
+    tmp.mkdir(parents=True, exist_ok=True)
+    try:
+        names, leaves, _ = _flatten_with_names(state)
+        arrays = {}
+        manifest = {"step": int(step), "leaves": []}
+        for i, (name, leaf) in enumerate(zip(names, leaves)):
+            arr = np.asarray(jax.device_get(leaf))
+            key = f"leaf_{i}"
+            # npz can't round-trip ml_dtypes (bfloat16 etc.): store raw
+            # bytes; the logical dtype lives in the manifest.
+            raw = np.frombuffer(
+                np.ascontiguousarray(arr).tobytes(), np.uint8)
+            arrays[key] = raw
+            manifest["leaves"].append({
+                "name": name, "key": key, "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "crc32": zlib.crc32(raw.tobytes()),
+            })
+        np.savez(tmp / "arrays.npz", **arrays)
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        with open(tmp / "manifest.json", "r+b") as f:
+            os.fsync(f.fileno())
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)
+        return final
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+
+
+def latest_step(directory: str | Path) -> int | None:
+    directory = Path(directory)
+    if not directory.exists():
+        return None
+    steps = sorted(int(p.name.split("_")[1]) for p in directory.iterdir()
+                   if p.name.startswith("step_"))
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(directory: str | Path, template: Any,
+                       step: int | None = None,
+                       shardings: Any = None) -> tuple[Any, int]:
+    """Restore into `template`'s structure; `shardings` (optional pytree of
+    NamedSharding) reshard onto the CURRENT mesh -- which may differ from
+    the mesh that wrote the checkpoint (elastic restart)."""
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    d = directory / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    data = np.load(d / "arrays.npz")
+
+    names, leaves, treedef = _flatten_with_names(template)
+    by_name = {e["name"]: e for e in manifest["leaves"]}
+    out = []
+    flat_shardings = (jax.tree_util.tree_leaves(shardings)
+                      if shardings is not None else [None] * len(leaves))
+    if shardings is not None and len(flat_shardings) != len(leaves):
+        flat_shardings = [None] * len(leaves)
+    import ml_dtypes  # noqa: F401  (registers bfloat16 & friends)
+    for name, leaf, sh in zip(names, leaves, flat_shardings):
+        if name not in by_name:
+            raise KeyError(f"checkpoint missing leaf {name}")
+        e = by_name[name]
+        raw = data[e["key"]]
+        if zlib.crc32(raw.tobytes()) != e["crc32"]:
+            raise IOError(f"checksum mismatch for {name} (corrupt checkpoint)")
+        arr = np.frombuffer(raw.tobytes(), np.dtype(e["dtype"])).reshape(
+            e["shape"])
+        want_shape = tuple(np.shape(leaf))
+        if tuple(arr.shape) != want_shape:
+            raise ValueError(
+                f"{name}: checkpoint shape {arr.shape} != template {want_shape}")
+        want_dtype = np.dtype(jax.numpy.result_type(leaf))
+        if arr.dtype != want_dtype:
+            arr = arr.astype(want_dtype)
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), step
+
+
+class CheckpointManager:
+    """Async save + retention."""
+
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.directory = Path(directory)
+        self.keep = keep
+        self._pool = concurrent.futures.ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="ckpt")
+        self._pending: concurrent.futures.Future | None = None
+        self._lock = threading.Lock()
+
+    def save_async(self, step: int, state: Any) -> None:
+        """Device->host transfer now; file IO on the background thread."""
+        names, leaves, treedef = _flatten_with_names(state)
+        host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
+        host_state = jax.tree_util.tree_unflatten(treedef, host_leaves)
+        self.wait()
+        self._pending = self._pool.submit(self._save_and_gc, step, host_state)
+
+    def _save_and_gc(self, step: int, state: Any) -> None:
+        save_checkpoint(self.directory, step, state)
+        self._gc()
+
+    def _gc(self) -> None:
+        with self._lock:
+            steps = sorted(int(p.name.split("_")[1])
+                           for p in self.directory.iterdir()
+                           if p.name.startswith("step_"))
+            for s in steps[:-self.keep]:
+                shutil.rmtree(self.directory / f"step_{s:08d}",
+                              ignore_errors=True)
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    def restore_latest(self, template: Any, shardings: Any = None):
+        return restore_checkpoint(self.directory, template,
+                                  shardings=shardings)

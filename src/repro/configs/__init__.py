@@ -1,0 +1,102 @@
+"""Architecture registry: ``--arch <id>`` -> RunConfig (FULL or SMOKE),
+plus the (arch x shape) cell definitions used by the dry-run and roofline.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..config import RunConfig, SHAPES
+from . import (gemma_2b, gemma_7b, granite_moe_3b_a800m, grok_1_314b,
+               mamba2_130m, musicgen_large, nemotron_4_15b, qwen2_vl_72b,
+               qwen3_1_7b, zamba2_2_7b)
+
+_MODULES = {
+    "qwen2-vl-72b": qwen2_vl_72b,
+    "nemotron-4-15b": nemotron_4_15b,
+    "qwen3-1.7b": qwen3_1_7b,
+    "gemma-2b": gemma_2b,
+    "gemma-7b": gemma_7b,
+    "musicgen-large": musicgen_large,
+    "mamba2-130m": mamba2_130m,
+    "grok-1-314b": grok_1_314b,
+    "granite-moe-3b-a800m": granite_moe_3b_a800m,
+    "zamba2-2.7b": zamba2_2_7b,
+}
+
+ARCH_NAMES = list(_MODULES)
+
+#: stub vision frontend: number of (precomputed) patch embeddings per sample
+VLM_PATCHES = 256
+
+
+def get_config(arch: str, smoke: bool = False) -> RunConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; available: {ARCH_NAMES}")
+    return _MODULES[arch].SMOKE if smoke else _MODULES[arch].FULL
+
+
+def cell_applicable(arch: str, shape: str) -> tuple[bool, str]:
+    """Is (arch x shape) a valid cell?  Returns (ok, reason-if-not).
+
+    long_500k requires sub-quadratic attention (DESIGN.md skip notes); all
+    ten archs are decoder-style so decode/prefill shapes run everywhere.
+    """
+    cfg = get_config(arch)
+    if shape == "long_500k" and not cfg.model.subquadratic:
+        return False, ("full-attention arch: 512k dense-KV decode is "
+                       "quadratic-cost; skipped per shape definition")
+    return True, ""
+
+
+def all_cells(include_skipped: bool = False):
+    """Yield (arch, shape, applicable, reason) for the 40 cells."""
+    for arch in ARCH_NAMES:
+        for shape in SHAPES:
+            ok, why = cell_applicable(arch, shape)
+            if ok or include_skipped:
+                yield arch, shape, ok, why
+
+
+def input_specs(cfg: RunConfig, shape: str,
+                seq_len: int | None = None,
+                global_batch: int | None = None) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a shape cell
+    (weak-type-correct, shardable, no device allocation).
+
+    train/prefill: token batches; decode: a single new token per sequence
+    (the KV cache / SSM state specs come from ``decode_state_specs``).
+    """
+    s, b, kind = SHAPES[shape]
+    s = seq_len or s
+    b = global_batch or b
+    m = cfg.model
+    i32 = jnp.int32
+
+    if kind == "train":
+        if m.family == "audio":
+            return {"tokens": jax.ShapeDtypeStruct((b, s, m.n_codebooks), i32),
+                    "labels": jax.ShapeDtypeStruct((b, s, m.n_codebooks), i32)}
+        if m.family == "vlm":
+            st = s - VLM_PATCHES
+            return {"tokens": jax.ShapeDtypeStruct((b, st), i32),
+                    "labels": jax.ShapeDtypeStruct((b, st), i32),
+                    "patch_embeds": jax.ShapeDtypeStruct(
+                        (b, VLM_PATCHES, m.d_model), jnp.bfloat16)}
+        return {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                "labels": jax.ShapeDtypeStruct((b, s), i32)}
+
+    if kind == "prefill":
+        if m.family == "audio":
+            return {"tokens": jax.ShapeDtypeStruct((b, s, m.n_codebooks), i32)}
+        return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+
+    # decode: one new token; cache length s
+    if m.family == "audio":
+        return {"token": jax.ShapeDtypeStruct((b, m.n_codebooks), i32)}
+    return {"token": jax.ShapeDtypeStruct((b,), i32)}
+
+
+__all__ = ["ARCH_NAMES", "VLM_PATCHES", "get_config", "cell_applicable",
+           "all_cells", "input_specs", "SHAPES"]

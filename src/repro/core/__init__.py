@@ -1,0 +1,31 @@
+"""RASA core: the paper's contribution, reproduced.
+
+- :mod:`repro.core.isa`       -- AMX-like tile ISA + register file w/ dirty bits
+- :mod:`repro.core.designs`   -- baseline + 7 RASA designs (Control x Data)
+- :mod:`repro.core.timing`    -- cycle-level sub-stage pipeline model
+- :mod:`repro.core.tiling`    -- register-aware GEMM lowering (Algorithm 1)
+- :mod:`repro.core.engine`    -- functional (numerics) execution
+- :mod:`repro.core.workloads` -- Table I layer set
+- :mod:`repro.core.area`      -- area/power/energy model (published constants)
+- :mod:`repro.core.simulator` -- evaluation driver
+"""
+
+from .designs import DESIGNS, EngineConfig, get_design
+from .isa import (NUM_TREGS, TILE_K, TILE_M, TILE_N, Instr, Op,
+                  TileRegisterFile, count_ops, validate_stream)
+from .simulator import SimReport, normalized_runtime, simulate, sweep_designs
+from .tiling import (ALG1_POLICY, MAX_REUSE_POLICY, GemmSpec, RegPolicy,
+                     lower_gemm, stream_stats)
+from .timing import PipelineSimulator, TimingResult, serial_mm_latency, steady_state_interval
+from .workloads import TABLE_I, batch_sweep
+
+__all__ = [
+    "DESIGNS", "EngineConfig", "get_design",
+    "NUM_TREGS", "TILE_K", "TILE_M", "TILE_N", "Instr", "Op",
+    "TileRegisterFile", "count_ops", "validate_stream",
+    "SimReport", "normalized_runtime", "simulate", "sweep_designs",
+    "ALG1_POLICY", "MAX_REUSE_POLICY", "GemmSpec", "RegPolicy",
+    "lower_gemm", "stream_stats",
+    "PipelineSimulator", "TimingResult", "serial_mm_latency",
+    "steady_state_interval", "TABLE_I", "batch_sweep",
+]

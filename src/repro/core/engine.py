@@ -1,0 +1,83 @@
+"""Functional execution of RASA instruction streams (numerics oracle).
+
+Executes a lowered instruction stream against real matrices with the
+engine's mixed-precision semantics -- bf16 operands, fp32 accumulation --
+exactly as the paper's PEs do ("BF16 in, FP32 out", §IV-B) and as the TPU
+MXU does.  Used by tests to prove that ``tiling.lower_gemm`` is a correct
+compiler for every register policy and edge-tile case, and by the examples
+to show bit-equivalence with the Pallas kernels' reference.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import ml_dtypes
+
+from .isa import NUM_TREGS, TILE_K, TILE_M, TILE_N, Instr, Op
+from .tiling import GemmSpec, RegPolicy, lower_gemm
+
+BF16 = ml_dtypes.bfloat16
+
+
+class FunctionalEngine:
+    """Executes rasa_tl / rasa_mm / rasa_ts against numpy tile storage."""
+
+    def __init__(self, a: np.ndarray, b: np.ndarray, c: np.ndarray,
+                 tile_m: int = TILE_M, tile_k: int = TILE_K, tile_n: int = TILE_N):
+        self.tile_m, self.tile_k, self.tile_n = tile_m, tile_k, tile_n
+        self.a = np.asarray(a, dtype=BF16)
+        self.b = np.asarray(b, dtype=BF16)
+        self.c = np.asarray(c, dtype=np.float32).copy()
+        self.tregs: list[np.ndarray | None] = [None] * NUM_TREGS
+
+    # -- tile address helpers ------------------------------------------------
+    def _slice(self, mat: str, addr: tuple) -> tuple:
+        _, i, j = addr
+        if mat == "A":
+            return (slice(i * self.tile_m, (i + 1) * self.tile_m),
+                    slice(j * self.tile_k, (j + 1) * self.tile_k))
+        if mat == "B":
+            return (slice(i * self.tile_k, (i + 1) * self.tile_k),
+                    slice(j * self.tile_n, (j + 1) * self.tile_n))
+        return (slice(i * self.tile_m, (i + 1) * self.tile_m),
+                slice(j * self.tile_n, (j + 1) * self.tile_n))
+
+    def execute(self, ins: Instr) -> None:
+        if ins.op is Op.TL:
+            mat = ins.addr[0]                          # type: ignore[index]
+            src = {"A": self.a, "B": self.b, "C": self.c}[mat]
+            self.tregs[ins.dst] = src[self._slice(mat, ins.addr)].copy()  # type: ignore
+        elif ins.op is Op.TS:
+            self.c[self._slice("C", ins.addr)] = self.tregs[ins.src1]     # type: ignore
+        else:  # MM: C += A @ B with bf16 multiply, fp32 accumulate
+            a = self.tregs[ins.src1].astype(np.float32)   # type: ignore[union-attr]
+            b = self.tregs[ins.src2].astype(np.float32)   # type: ignore[union-attr]
+            c = self.tregs[ins.dst].astype(np.float32)    # type: ignore[union-attr]
+            self.tregs[ins.dst] = c + a @ b
+
+
+def run_gemm(a: np.ndarray, b: np.ndarray, c: np.ndarray,
+             policy: RegPolicy | None = None) -> np.ndarray:
+    """Lower + functionally execute C += A @ B; returns the resulting C."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2 and c.shape == (m, n)
+    spec = GemmSpec("run", m, k, n)
+    # pad to tile multiples so tile slicing is uniform; strip afterwards.
+    mt, kt, nt = spec.tiles()
+    ap = np.zeros((mt * TILE_M, kt * TILE_K), np.float32); ap[:m, :k] = a
+    bp = np.zeros((kt * TILE_K, nt * TILE_N), np.float32); bp[:k, :n] = b
+    cp = np.zeros((mt * TILE_M, nt * TILE_N), np.float32); cp[:m, :n] = c
+    eng = FunctionalEngine(ap, bp, cp)
+    for ins in lower_gemm(spec, policy or RegPolicy()):
+        eng.execute(ins)
+    return eng.c[:m, :n]
+
+
+def reference_gemm(a: np.ndarray, b: np.ndarray, c: np.ndarray) -> np.ndarray:
+    """Mixed-precision reference: bf16-rounded operands, fp32 accumulate."""
+    a16 = np.asarray(a, dtype=BF16).astype(np.float32)
+    b16 = np.asarray(b, dtype=BF16).astype(np.float32)
+    return np.asarray(c, np.float32) + a16 @ b16

@@ -1,0 +1,72 @@
+"""High-level driver: workload -> lowered stream -> timing, per design.
+
+This is the reproduction of the paper's evaluation flow (LIBXSMM trace ->
+MacSim), minus the parts we rebuild analytically (see DESIGN.md §3): the
+GEMM is lowered by ``tiling.lower_gemm`` (the LIBXSMM-equivalent microkernel
+generator) and timed by ``timing.PipelineSimulator`` (the MacSim-equivalent
+matrix-engine model).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+from .designs import DESIGNS, EngineConfig, get_design
+from .timing import PipelineSimulator, TimingResult
+from .tiling import ALG1_POLICY, GemmSpec, RegPolicy, lower_gemm
+
+
+@dataclasses.dataclass(frozen=True)
+class SimReport:
+    design: str
+    workload: str
+    cycles: float
+    n_mm: int
+    n_tl: int
+    n_ts: int
+    wl_skips: int
+    utilization: float
+    runtime_s: float
+    macs: int
+
+    @property
+    def macs_per_cycle(self) -> float:
+        return self.macs / self.cycles if self.cycles else 0.0
+
+
+def simulate(spec: GemmSpec, design: str | EngineConfig,
+             policy: RegPolicy = ALG1_POLICY) -> SimReport:
+    cfg = get_design(design) if isinstance(design, str) else design
+    sim = PipelineSimulator(cfg)
+    res: TimingResult = sim.run(list(lower_gemm(spec, policy)))
+    return SimReport(
+        design=cfg.name,
+        workload=spec.name,
+        cycles=res.cycles,
+        n_mm=res.n_mm, n_tl=res.n_tl, n_ts=res.n_ts,
+        wl_skips=res.wl_skips,
+        utilization=res.utilization,
+        runtime_s=res.cycles / cfg.engine_clock_hz,
+        macs=spec.macs,
+    )
+
+
+@functools.lru_cache(maxsize=4096)
+def _simulate_cached(spec: GemmSpec, design: str, policy: RegPolicy) -> SimReport:
+    return simulate(spec, design, policy)
+
+
+def normalized_runtime(spec: GemmSpec, design: str,
+                       policy: RegPolicy = ALG1_POLICY,
+                       baseline: str = "BASE") -> float:
+    """Runtime normalized to the BASE design (paper Fig. 5 / Fig. 7 y-axis)."""
+    base = _simulate_cached(spec, baseline, policy)
+    d = _simulate_cached(spec, design, policy)
+    return d.cycles / base.cycles
+
+
+def sweep_designs(spec: GemmSpec, designs: list[str] | None = None,
+                  policy: RegPolicy = ALG1_POLICY) -> dict[str, SimReport]:
+    return {name: _simulate_cached(spec, name, policy)
+            for name in (designs or list(DESIGNS))}

@@ -1,0 +1,217 @@
+"""Cycle-level timing model of the RASA matrix engine (paper §IV-B, Fig. 4).
+
+The execution of one ``rasa_mm`` on the weight-stationary array is divided
+into four sub-stages (durations in engine cycles, array of ``rows x cols``):
+
+  WL  (Weight Load)   rows          stream B top->bottom
+  FF  (Feed First)    tm            feed A/C until the first array row is done
+  FS  (Feed Second)   rows - 1      drain the feed skew through lower rows
+  DR  (Drain)         cols (+1 DM)  eject remaining outputs (+ DM merge row)
+
+Scheduling rules per design (cf. DESIGN.md §1 for the validation targets):
+
+  BASE   : fully serial -- WL_i >= DR_end_{i-1}.
+  PIPE   : WL_i overlaps the previous DR -- WL_i >= FS_end_{i-1}.
+  WLBP   : if the B register is reused & clean (dirty bit), skip WL and let
+           FF_i overlap the previous FS/DR -- FF_i >= FF_end_{i-1}.
+  WLS+DB : WL_i streams into the shadow buffer behind the previous
+           instruction's compute wavefront (extra per-PE links); effectively
+           hidden whenever the array is still busy, so FF_i >= FF_end_{i-1}.
+           A cold WL (idle array) still pays the full `rows` cycles.
+
+True data dependencies are honoured through register ready-times: a tile
+load's consumer waits `load_latency`; an ``rasa_mm`` accumulating into the
+same C register as a previous ``rasa_mm`` must wait for that instruction's
+DR to complete (C streams through the array) -- this is why Algorithm 1 in
+the paper round-robins four C registers, and it is what makes the register
+*allocation* policy performance-relevant ("register-aware").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from .designs import EngineConfig
+from .isa import Instr, Op, TileRegisterFile
+
+
+@dataclasses.dataclass
+class MMSchedule:
+    index: int
+    wl_start: float
+    wl_skipped: bool
+    ff_start: float
+    ff_end: float
+    fs_end: float
+    dr_end: float
+
+
+@dataclasses.dataclass
+class TimingResult:
+    cycles: float                      # engine cycles until everything retires
+    n_mm: int
+    n_tl: int
+    n_ts: int
+    wl_skips: int                      # WLBP hits
+    useful_macs: float                 # sum(tm*tk*tn) over mm instructions
+    peak_macs_per_cycle: int
+    schedules: list[MMSchedule] | None = None
+
+    @property
+    def utilization(self) -> float:
+        """Average MAC-unit utilization (useful MACs / peak MAC slots)."""
+        if self.cycles <= 0:
+            return 0.0
+        return self.useful_macs / (self.cycles * self.peak_macs_per_cycle)
+
+    @property
+    def runtime_s(self) -> float:
+        return self.cycles  # scaled by clock in callers that need seconds
+
+
+class PipelineSimulator:
+    """In-order issue, cycle-level sub-stage pipeline simulator."""
+
+    def __init__(self, config: EngineConfig, keep_schedules: bool = False):
+        self.cfg = config
+        self.keep_schedules = keep_schedules
+
+    def run(self, stream: Sequence[Instr]) -> TimingResult:
+        cfg = self.cfg
+        wl = cfg.wl_cycles
+        fs = cfg.fs_cycles
+        dr = cfg.dr_cycles
+        # core->engine issue bandwidth: instructions issued per engine cycle.
+        issue_per_cycle = cfg.core_issue_width * (cfg.core_clock_hz / cfg.engine_clock_hz)
+        load_lat = float(cfg.load_latency)
+        load_ports = cfg.load_ports
+
+        regfile = TileRegisterFile()
+        reg_ready = [0.0] * len(regfile.regs)
+
+        # previous MM stage times (engine constraints are chained through these)
+        p_ff_start = -1.0
+        p_ff_end = 0.0
+        p_fs_end = 0.0
+        p_dr_end = 0.0
+        have_prev = False
+        # the weight-insertion network is a single resource: real WLs are
+        # serialized on it (monotonic), independent of WLBP skips in between.
+        wl_port_free = 0.0
+
+        next_load_slot = 0.0           # load-port availability (ports/cycle)
+        t_end = 0.0
+        n_mm = n_tl = n_ts = wl_skips = 0
+        useful = 0.0
+        schedules: list[MMSchedule] = [] if self.keep_schedules else None  # type: ignore
+
+        for idx, ins in enumerate(stream):
+            t_issue = idx / issue_per_cycle
+
+            if ins.op is Op.TL:
+                n_tl += 1
+                start = max(t_issue, next_load_slot)
+                next_load_slot = start + 1.0 / load_ports
+                done = start + load_lat
+                regfile.write(ins.dst, ins.addr)       # type: ignore[arg-type]
+                reg_ready[ins.dst] = done              # type: ignore[index]
+                t_end = max(t_end, done)
+                continue
+
+            if ins.op is Op.TS:
+                n_ts += 1
+                done = max(t_issue, reg_ready[ins.src1]) + 1.0  # type: ignore[index]
+                t_end = max(t_end, done)
+                continue
+
+            # ---- rasa_mm ---------------------------------------------------
+            n_mm += 1
+            c, a, b = ins.dst, ins.src1, ins.src2
+            t_ready_ac = max(t_issue, reg_ready[a], reg_ready[c])  # type: ignore[index]
+            t_ready_b = max(t_issue, reg_ready[b])                 # type: ignore[index]
+
+            reuse = cfg.wlbp and regfile.mm_weight_reusable(b)     # type: ignore[arg-type]
+
+            if reuse:
+                wl_start = t_ready_b
+                wl_skipped = True
+                ff_start = max(t_ready_ac, p_ff_end if have_prev else 0.0)
+            elif cfg.wls:
+                # prefetch into shadow buffer; hidden behind an active array
+                wl_start = max(t_ready_b,
+                               p_ff_start if have_prev else 0.0,
+                               wl_port_free)
+                hidden = have_prev and wl_start <= p_fs_end
+                weights_ready = (wl_start + 1.0) if hidden else (wl_start + wl)
+                wl_skipped = False
+                ff_start = max(t_ready_ac,
+                               p_ff_end if have_prev else 0.0,
+                               weights_ready)
+            elif cfg.pipe:
+                wl_start = max(t_ready_b, p_fs_end if have_prev else 0.0,
+                               wl_port_free)
+                wl_skipped = False
+                ff_start = max(t_ready_ac, wl_start + wl,
+                               p_dr_end if have_prev else 0.0)
+            else:  # BASE
+                wl_start = max(t_ready_b, p_dr_end if have_prev else 0.0,
+                               wl_port_free)
+                wl_skipped = False
+                ff_start = max(t_ready_ac, wl_start + wl)
+
+            if reuse:
+                wl_skips += 1
+            else:
+                regfile.latch_weights(b)               # type: ignore[arg-type]
+
+            ff_end = ff_start + cfg.ff_cycles(ins.tm)
+            fs_end = ff_end + fs
+            dr_end = fs_end + dr
+
+            # C register is rewritten by this MM; ready when fully drained.
+            regfile.write(c, ("mm-out", idx))          # type: ignore[arg-type]
+            reg_ready[c] = dr_end                      # type: ignore[index]
+            # writing C does not disturb the latched weights; re-mark B latched
+            regfile.latch_weights(b)                   # type: ignore[arg-type]
+            if reuse:
+                # keep generation bookkeeping consistent: latch unchanged
+                pass
+
+            useful += ins.tm * ins.tk * ins.tn
+            t_end = max(t_end, dr_end)
+
+            if self.keep_schedules:
+                schedules.append(MMSchedule(idx, wl_start, wl_skipped,
+                                            ff_start, ff_end, fs_end, dr_end))
+
+            if not wl_skipped:
+                wl_port_free = wl_start + wl
+            p_ff_start, p_ff_end, p_fs_end, p_dr_end = ff_start, ff_end, fs_end, dr_end
+            have_prev = True
+
+        return TimingResult(
+            cycles=t_end,
+            n_mm=n_mm, n_tl=n_tl, n_ts=n_ts,
+            wl_skips=wl_skips,
+            useful_macs=useful,
+            peak_macs_per_cycle=cfg.peak_macs_per_cycle,
+            schedules=schedules,
+        )
+
+
+def serial_mm_latency(rows: int, cols: int, tm: int) -> int:
+    """Closed form used by Fig. 2: WL + FF + FS + DR = 2*rows + tm + cols - 1."""
+    return 2 * rows + tm + cols - 1
+
+
+def steady_state_interval(cfg: EngineConfig, tm: int, weight_reused: bool) -> float:
+    """Analytic issue-to-issue interval of back-to-back rasa_mm (for tests
+    and napkin math; the simulator must agree on ideal streams)."""
+    if cfg.wlbp and weight_reused:
+        return tm
+    if cfg.wls:
+        return tm
+    if cfg.pipe:
+        return cfg.wl_cycles + tm + cfg.fs_cycles
+    return cfg.serial_latency(tm)

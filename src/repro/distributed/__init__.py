@@ -1,0 +1,7 @@
+"""Distribution substrate: mesh-aware sharding rules + collectives."""
+
+from .sharding import (MeshContext, activation_spec, constrain, current_ctx,
+                       kv_cache_spec, mesh_context, param_spec, param_specs)
+
+__all__ = ["MeshContext", "activation_spec", "constrain", "current_ctx",
+           "kv_cache_spec", "mesh_context", "param_spec", "param_specs"]

@@ -1,0 +1,233 @@
+"""Logical-axis sharding rules -> PartitionSpecs (DP / FSDP / TP / SP / EP).
+
+Strategy (DESIGN.md §5):
+  * batch (DP)            over ("pod", "data")  [multi-pod] or ("data",)
+  * parameter storage     FSDP over the data axes (d_model-ish dims)
+  * tensor parallel (TP)  over "model" (heads / ff / vocab dims)
+  * sequence parallel     over "data" for the 500k KV cache (decode)
+  * experts               TP within each expert (expert dim replicated --
+                          8 and 40 experts don't divide the 16-wide model
+                          axis; see DESIGN.md §5)
+
+Parameter specs are derived from leaf *names*: every module names its
+parameters from a fixed vocabulary (wq, wo, w_up, experts_w1, ...).  Stacked
+per-layer parameters carry a leading layer dim (spec gets a leading None).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..config import ParallelConfig
+
+_STATE = threading.local()
+
+
+@dataclasses.dataclass
+class MeshContext:
+    mesh: Mesh
+    parallel: ParallelConfig
+
+    @property
+    def fsdp_axes(self):
+        if not self.parallel.fsdp:
+            return None
+        return tuple(a for a in ("pod", "data") if a in self.mesh.axis_names) or None
+
+    @property
+    def dp_axes(self):
+        return tuple(a for a in ("pod", "data") if a in self.mesh.axis_names)
+
+
+def current_ctx() -> MeshContext | None:
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh, parallel: ParallelConfig):
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = MeshContext(mesh, parallel)
+    try:
+        with mesh:
+            yield _STATE.ctx
+    finally:
+        _STATE.ctx = prev
+
+
+# ---------------------------------------------------------------- parameters
+
+def _param_rules(fsdp) -> dict[str, P]:
+    """leaf-name -> PartitionSpec (without the stacked-layer leading dim)."""
+    f = fsdp  # None (replicated storage) or axis tuple
+    return {
+        # embeddings / head
+        "embedding": P("model", f),          # [V, D]
+        "lm_head": P(f, "model"),            # [D, V] (or [D, cb*V])
+        "patch_proj": P(f, "model"),         # vlm stub frontend
+        # attention
+        "wq": P(f, "model"),                 # [D, H*hd]
+        "wk": P(f, "model"),
+        "wv": P(f, "model"),
+        "wo": P("model", f),                 # [H*hd, D]
+        "q_norm": P(),                       # [hd]
+        "k_norm": P(),
+        # dense mlp
+        "w_gate": P(f, "model"),             # [D, F]
+        "w_up": P(f, "model"),
+        "w_gate_up": P(f, None, "model"),    # [D, 2, F] (fused)
+        "w_down": P("model", f),             # [F, D]
+        # moe
+        "router": P(f, None),                # [D, E]
+        "experts_w_gate": P(None, f, "model"),   # [E, D, Fe]
+        "experts_w_up": P(None, f, "model"),
+        "experts_w_gate_up": P(None, f, None, "model"),  # [E, D, 2, Fe]
+        "experts_w_down": P(None, "model", f),   # [E, Fe, D]
+        # mamba2 / ssd
+        "in_proj": P(f, "model"),            # [D, proj]
+        "out_proj": P("model", f),           # [di, D]
+        "conv_w": P(None, "model"),          # [k, channels]
+        "conv_b": P("model"),
+        "A_log": P(),                        # [h]
+        "D_skip": P(),                       # [h]
+        "dt_bias": P(),
+        "ssm_norm": P("model"),              # [di]
+        # norms
+        "scale": P(),
+        "norm1": P(), "norm2": P(), "norm3": P(), "final_norm": P(),
+    }
+
+
+def param_spec(name: str, shape: tuple[int, ...],
+               ctx: MeshContext | None = None) -> P:
+    ctx = ctx or current_ctx()
+    fsdp = ctx.fsdp_axes if ctx else None
+    rules = _param_rules(fsdp)
+    if name not in rules:
+        return P()                           # replicate unknown small params
+    spec = rules[name]
+    ndim = len(shape)
+    # stacked per-layer parameters have a leading layer dim
+    if ndim == len(spec) + 1:
+        spec = P(None, *spec)
+    elif ndim != len(spec):
+        # e.g. biases / scalars that share a rule name: replicate
+        return P()
+    if ctx is None:
+        return spec
+    # drop axes that don't divide the dim (e.g. vocab 50280 over 16)
+    fixed = []
+    for dim, axes in zip(shape, spec):
+        if axes is None:
+            fixed.append(None)
+            continue
+        ax = axes if isinstance(axes, tuple) else (axes,)
+        size = 1
+        for a in ax:
+            size *= ctx.mesh.shape[a]
+        fixed.append(axes if dim % size == 0 else None)
+    return P(*fixed)
+
+
+def param_specs(params: Any, ctx: MeshContext | None = None) -> Any:
+    """Tree of PartitionSpec matching a parameter tree (by leaf key name)."""
+    def walk(tree):
+        if isinstance(tree, dict):
+            return {k: (param_spec(k, v.shape, ctx)
+                        if not isinstance(v, dict) else walk(v))
+                    for k, v in tree.items()}
+        return tree
+    return walk(params)
+
+
+def shardings_for(params: Any, mesh: Mesh, ctx: MeshContext | None = None):
+    specs = param_specs(params, ctx)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# --------------------------------------------------------------- activations
+
+def activation_spec(kind: str, ctx: MeshContext | None = None) -> P:
+    """Canonical activation shardings.
+
+    kinds: tokens [B,S] | btd [B,S,D] | btf [B,S,F] | logits [B,S,V]
+           | bhsd [B,H,S,hd] | bd [B,D]
+    """
+    ctx = ctx or current_ctx()
+    dp = ctx.dp_axes if ctx else ("data",)
+    return {
+        "tokens": P(dp, None),
+        # residual stream: sequence sharded over "model" between blocks
+        # (Megatron-style sequence parallelism -- XLA inserts the
+        # all-gather before qkv/mlp and the reduce-scatter after; cuts the
+        # stored scan carries by the model-axis width)
+        "btd": P(dp, "model", None),
+        "btf": P(dp, None, "model"),
+        "logits": P(dp, None, "model"),
+        "bhsd": P(dp, "model", None, None),
+        "bd": P(dp, None),
+        # MoE expert buffers [E, G*C, *] (group-major): capacity over DP,
+        # expert hidden over model
+        "ecd": P(None, dp, None),
+        "ecf": P(None, dp, "model"),
+        # audio per-codebook logits [B, S, cb, V]
+        "bscv": P(dp, None, None, "model"),
+    }[kind]
+
+
+def constrain(x: jax.Array, kind: str) -> jax.Array:
+    """with_sharding_constraint iff a mesh context is active (no-op in
+    single-device smoke tests).  Mesh axes that don't divide the concrete
+    dim are dropped (decode steps with S=1, batch=1 long-context, reduced
+    smoke configs) -- the constraint degrades instead of erroring."""
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    spec = activation_spec(kind, ctx)
+    fixed = []
+    for dim, axes in zip(x.shape, tuple(spec) + (None,) * (x.ndim - len(spec))):
+        if axes is None:
+            fixed.append(None)
+            continue
+        ax_tuple = axes if isinstance(axes, tuple) else (axes,)
+        size = 1
+        for a in ax_tuple:
+            size *= ctx.mesh.shape[a]
+        fixed.append(axes if dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*fixed)))
+
+
+def kv_cache_spec(n_kv_heads: int, head_dim: int,
+                  ctx: MeshContext | None = None,
+                  sequence_parallel: bool | None = None) -> P:
+    """[B, Hkv, S, hd] cache sharding.
+
+    Default: batch over DP, kv heads over model (falling back to head_dim
+    when kv heads don't divide, e.g. MQA kv=1 with head_dim 256).
+    Sequence-parallel decode (500k): sequence over "data", batch replicated.
+    """
+    ctx = ctx or current_ctx()
+    if ctx is None:
+        return P()
+    model = ctx.mesh.shape.get("model", 1)
+    heads_shardable = n_kv_heads % model == 0
+    hd_shardable = head_dim % model == 0
+    sp = (ctx.parallel.sequence_parallel_decode
+          if sequence_parallel is None else sequence_parallel)
+    if sp:
+        if heads_shardable:
+            return P(None, "model", "data", None)
+        return P(None, None, "data", "model" if hd_shardable else None)
+    dp = ctx.dp_axes
+    if heads_shardable:
+        return P(dp, "model", None, None)
+    if hd_shardable:
+        return P(dp, None, None, "model")
+    return P(dp, None, None, None)

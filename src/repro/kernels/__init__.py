@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the RASA framework (validated in interpret mode).
+
+- :mod:`repro.kernels.rasa_gemm`       -- RASA-scheduled tiled GEMM (the
+  paper's matrix engine mapped onto the MXU pipeline; DESIGN.md §3)
+- :mod:`repro.kernels.flash_attention` -- blockwise causal attention
+- :mod:`repro.kernels.ops`             -- jit'd public wrappers
+- :mod:`repro.kernels.ref`             -- pure-jnp oracles
+"""
+
+from .ops import flash_mha, rasa_matmul
+from .rasa_gemm import GemmBlocks, SCHEDULES, default_blocks, rasa_gemm, schedule_cost
+from .flash_attention import flash_attention
+from .ssd_chunk import hbm_bytes_fused, ssd_chunk_fused
+from . import ref
+
+__all__ = ["flash_mha", "rasa_matmul", "GemmBlocks", "SCHEDULES",
+           "default_blocks", "rasa_gemm", "schedule_cost",
+           "flash_attention", "ssd_chunk_fused", "hbm_bytes_fused", "ref"]

@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth used by tests (assert_allclose over shape/dtype
+sweeps) and by models when the Pallas engine is disabled.  Semantics mirror
+the RASA PE datapath: bf16 (or given dtype) operands, fp32 accumulation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_matmul(a: jax.Array, b: jax.Array,
+               out_dtype: jnp.dtype = jnp.float32) -> jax.Array:
+    """C = A @ B with fp32 accumulation (bf16-in/fp32-out PE semantics)."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def ref_matmul_accum(a: jax.Array, b: jax.Array, c: jax.Array,
+                     out_dtype: jnp.dtype = jnp.float32) -> jax.Array:
+    """C += A @ B (the rasa_mm contract)."""
+    return (c.astype(jnp.float32)
+            + jnp.dot(a, b, preferred_element_type=jnp.float32)).astype(out_dtype)
+
+
+def ref_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                  *, causal: bool = True, scale: float | None = None,
+                  bias: jax.Array | None = None) -> jax.Array:
+    """Multi-head attention oracle.
+
+    q: [B, Hq, Sq, D]; k, v: [B, Hkv, Skv, D] with Hq % Hkv == 0 (GQA --
+    kv heads are broadcast over query-head groups).  fp32 softmax.
+    """
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if group > 1:
+        kf = jnp.repeat(kf, group, axis=1)
+        vf = jnp.repeat(vf, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    if bias is not None:
+        logits = logits + bias
+    if causal:
+        skv = k.shape[2]
+        mask = jnp.tril(jnp.ones((sq, skv), bool), k=skv - sq)
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vf)
+    return out.astype(q.dtype)
+
+
+def ref_decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                         lengths: jax.Array | None = None,
+                         scale: float | None = None) -> jax.Array:
+    """Single-token decode attention oracle.
+
+    q: [B, Hq, D]; caches: [B, Hkv, S, D]; lengths: [B] valid cache lengths
+    (None = all valid).  Returns [B, Hq, D].
+    """
+    b, hq, d = q.shape
+    hkv, s = k_cache.shape[1], k_cache.shape[2]
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    qf = q.astype(jnp.float32).reshape(b, hkv, group, d) * scale
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bhsd->bhgs", qf, kf)
+    if lengths is not None:
+        mask = jnp.arange(s)[None, None, None, :] < lengths[:, None, None, None]
+        logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", probs, vf)
+    return out.reshape(b, hq, d).astype(q.dtype)

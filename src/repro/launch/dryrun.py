@@ -1,0 +1,290 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be run as its own process (``python -m repro.launch.dryrun``): the two
+lines above execute before any other import -- jax locks the device count on
+first init -- and must never leak into tests/benches (which want 1 device).
+
+Per cell this produces, from the compiled artifact:
+  * memory_analysis()  -- per-device bytes: proves the cell fits HBM;
+  * cost_analysis()    -- per-device FLOPs / bytes accessed;
+  * the optimized HLO  -- collective ops + operand bytes (roofline comm term);
+and stores everything in benchmarks/results/dryrun/<cell>.json, which
+EXPERIMENTS.md §Dry-run / §Roofline and the perf loop read.
+
+cost_analysis on this JAX counts a scan body ONCE (verified empirically),
+so for roofline FLOPs we additionally compile layer-UNROLLED reduced-depth
+variants (n_layers = 0 and 1 group) and combine analytically:
+total = embed_head + n_groups * per_group.  The full-depth scanned compile
+is still what proves memory + sharding.
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+
+def _cell_path(arch: str, shape: str, multi_pod: bool) -> Path:
+    pod = "pod2" if multi_pod else "pod1"
+    return RESULTS_DIR / f"{arch}__{shape}__{pod}.json"
+
+
+def build_step(cfg, shape_kind: str, seq_len: int, batch: int, ctx):
+    """Returns (fn, example_args (ShapeDtypeStructs), in_shardings,
+    donate_argnums) for the cell's step function."""
+    from ..configs import input_specs
+    from ..models import build_model
+    from ..serving.engine import _params_shardings, decode_state_shardings
+    from ..training.step import (batch_shardings, build_train_step,
+                                 init_train_state, state_shardings)
+    from ..optim.adamw import AdamWState
+    from ..training.step import TrainState
+
+    api = build_model(cfg)
+    params_shapes = jax.eval_shape(api.init, jax.random.key(0))
+
+    if shape_kind == "train":
+        from ..optim.adamw import adamw_init
+        opt_shapes = jax.eval_shape(
+            lambda p: adamw_init(p, cfg.parallel.opt_state_dtype),
+            params_shapes)
+        state_shapes = TrainState(params=params_shapes, opt=opt_shapes,
+                                  step=jax.ShapeDtypeStruct((), jnp.int32))
+        specs = input_specs(cfg, "train_4k", seq_len=seq_len,
+                            global_batch=batch)
+        step = build_train_step(api)
+        st_sh = state_shardings(api, state_shapes, ctx)
+        b_sh = batch_shardings(api, specs, ctx)
+        return (step, (state_shapes, specs), (st_sh, b_sh), (0,))
+
+    if shape_kind == "prefill":
+        from ..configs import input_specs as ispec
+        specs = ispec(cfg, "prefill_32k", seq_len=seq_len, global_batch=batch)
+        state_shapes = jax.eval_shape(
+            lambda: api.init_decode_state(batch, max_seq=seq_len))
+        params_sh = _params_shardings(api, ctx)
+        st_sh = decode_state_shardings(api, state_shapes, ctx)
+        from ..distributed.sharding import activation_spec
+        from jax.sharding import NamedSharding
+        tok_sh = NamedSharding(ctx.mesh, activation_spec("tokens", ctx))
+        fn = lambda params, tokens, state: api.prefill(params, tokens, state)
+        return (fn, (params_shapes, specs["tokens"], state_shapes),
+                (params_sh, tok_sh, st_sh), (2,))
+
+    # decode: cache of length seq_len, one new token
+    specs = None
+    from ..configs import input_specs as ispec
+    shape_name = "long_500k" if seq_len >= 500_000 else "decode_32k"
+    specs = ispec(cfg, shape_name, seq_len=seq_len, global_batch=batch)
+    state_shapes = jax.eval_shape(
+        lambda: api.init_decode_state(batch, max_seq=seq_len))
+    params_sh = _params_shardings(api, ctx)
+    st_sh = decode_state_shardings(api, state_shapes, ctx)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dp = ctx.dp_axes
+    tok_spec = P(dp if batch % 16 == 0 else None)
+    if cfg.model.family == "audio":
+        tok_spec = P(dp if batch % 16 == 0 else None, None)
+    tok_sh = NamedSharding(ctx.mesh, tok_spec)
+    fn = lambda params, token, state: api.decode_step(params, token, state)
+    return (fn, (params_shapes, specs["token"], state_shapes),
+            (params_sh, tok_sh, st_sh), (2,))
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum operand bytes of collective ops in optimized HLO."""
+    import re
+    dtype_bytes = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                   "s8": 1, "u8": 1, "f64": 8, "s64": 8, "pred": 1,
+                   "s16": 2, "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+    out = {}
+    pattern = re.compile(
+        r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+        r"(?:-start|-done)?[^=]*=\s*((?:\([^)]*\)|\S+))")
+    for m in re.finditer(
+            r"^\s*\S+\s*=\s*((?:\([^)]*\)|[\w\[\],{}]+))\s+"
+            r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+            r"collective-permute)(?!-done)", hlo_text, re.M):
+        shapes_str, op = m.group(1), m.group(2)
+        total = 0
+        for t, dims in re.findall(r"(\w+)\[([\d,]*)\]", shapes_str):
+            if t not in dtype_bytes:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * dtype_bytes[t]
+        key = op
+        out[key] = out.get(key, 0) + total
+        out[f"{key}_count"] = out.get(f"{key}_count", 0) + 1
+    return out
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, force: bool = False,
+             reduced_depth: int | None = None) -> dict:
+    from ..config import SHAPES
+    from ..configs import cell_applicable, get_config
+    from ..distributed.sharding import mesh_context
+    from .mesh import make_production_mesh
+
+    suffix = "" if reduced_depth is None else f"__d{reduced_depth}"
+    path = _cell_path(arch, shape, multi_pod)
+    path = path.with_name(path.stem + suffix + ".json")
+    if path.exists() and not force:
+        return json.loads(path.read_text())
+
+    ok, why = cell_applicable(arch, shape)
+    if not ok:
+        result = {"arch": arch, "shape": shape, "skipped": True, "reason": why}
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(result, indent=2))
+        return result
+
+    seq_len, batch, kind = SHAPES[shape]
+    cfg = get_config(arch)
+    if multi_pod:
+        cfg = dataclasses.replace(
+            cfg, parallel=dataclasses.replace(cfg.parallel, pods=2))
+    if shape == "long_500k":
+        cfg = dataclasses.replace(
+            cfg, parallel=dataclasses.replace(cfg.parallel,
+                                              sequence_parallel_decode=True))
+    if reduced_depth is not None:
+        # unrolled python-loop layers AND unrolled inner chunk loops
+        # (attention/CE/SSD) so cost_analysis counts every op -- scan
+        # bodies are counted once; see module docstring
+        # NOTE: SSD keeps its production chunk (the chunk size changes the
+        # algorithm's FLOPs) -- its chunk scan is unrolled instead.
+        cfg = dataclasses.replace(
+            cfg,
+            model=dataclasses.replace(cfg.model, n_layers=reduced_depth),
+            parallel=dataclasses.replace(cfg.parallel, scan_layers=False),
+            engine=dataclasses.replace(cfg.engine,
+                                       attn_q_chunk=seq_len,
+                                       attn_kv_chunk=seq_len,
+                                       ce_chunk=seq_len,
+                                       unroll_ssd=True))
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with mesh_context(mesh, cfg.parallel) as ctx:
+        fn, args, shardings, donate = build_step(cfg, kind, seq_len, batch, ctx)
+        lowered = jax.jit(fn, in_shardings=shardings,
+                          donate_argnums=donate).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        colls = parse_collectives(hlo)
+
+    n_dev = 512 if multi_pod else 256
+    unit = 1
+    if get_config(arch).model.family == "hybrid":
+        unit = get_config(arch).model.hybrid.attn_every
+    result = {
+        "arch": arch, "shape": shape, "multi_pod": multi_pod,
+        "unit_layers": unit,
+        "total_layers": get_config(arch).model.n_layers,
+        "mesh": [2, 16, 16] if multi_pod else [16, 16],
+        "devices": n_dev,
+        "kind": kind, "seq_len": seq_len, "batch": batch,
+        "reduced_depth": reduced_depth,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes_per_device": mem.argument_size_in_bytes,
+            "output_bytes_per_device": mem.output_size_in_bytes,
+            "temp_bytes_per_device": mem.temp_size_in_bytes,
+            "alias_bytes_per_device": mem.alias_size_in_bytes,
+            "peak_bytes_per_device": (mem.argument_size_in_bytes
+                                      + mem.output_size_in_bytes
+                                      + mem.temp_size_in_bytes
+                                      - mem.alias_size_in_bytes),
+        },
+        "cost_per_device": {
+            "flops": cost.get("flops", 0.0),
+            "transcendentals": cost.get("transcendentals", 0.0),
+            "bytes_accessed": cost.get("bytes accessed", 0.0),
+        },
+        "collectives_per_device_bytes": colls,
+        "hlo_bytes": len(hlo),
+    }
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(result, indent=2))
+    return result
+
+
+def run_layer_costs(arch: str, shape: str, force: bool = False) -> None:
+    """Reduced-depth UNROLLED compiles (depth 0 and one unit) on the
+    single-pod mesh -- the roofline's accurate per-layer cost source."""
+    from ..configs import get_config
+    unit = 1
+    if get_config(arch).model.family == "hybrid":
+        unit = get_config(arch).model.hybrid.attn_every
+    for depth in (0, unit):
+        run_cell(arch, shape, multi_pod=False, force=force,
+                 reduced_depth=depth)
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--layer-costs", action="store_true",
+                    help="also compile reduced-depth unrolled variants "
+                         "(roofline per-layer costs)")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    from ..configs import ARCH_NAMES, SHAPES
+
+    cells = []
+    archs = [args.arch] if args.arch else ARCH_NAMES
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    failures = 0
+    for arch, shape, mp in cells:
+        tag = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
+        try:
+            r = run_cell(arch, shape, mp, force=args.force)
+            if r.get("skipped"):
+                print(f"[skip] {tag}: {r['reason']}")
+            else:
+                mem_gb = r["memory"]["peak_bytes_per_device"] / 2**30
+                print(f"[ ok ] {tag}: peak {mem_gb:.2f} GiB/dev, "
+                      f"compile {r.get('compile_s', '?')}s "
+                      f"(flops/dev {r['cost_per_device']['flops']:.3g})")
+            if args.layer_costs and not mp and not r.get("skipped"):
+                run_layer_costs(arch, shape, force=args.force)
+                print(f"[ ok ] {tag}: layer-cost artifacts written")
+        except Exception as e:
+            failures += 1
+            print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
+            traceback.print_exc()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Model zoo + the uniform ModelApi used by training/serving/launch.
+
+Families: dense / moe / vlm / audio (transformer.py), ssm / hybrid
+(ssm_lm.py).  All GEMMs route through the configurable matrix engine
+(`repro.models.common.matmul`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..config import ModelConfig, RunConfig
+from . import ssm_lm, transformer
+
+_TRANSFORMER_FAMILIES = ("dense", "moe", "vlm", "audio")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    """Functional model interface (params are explicit pytrees)."""
+    cfg: RunConfig
+    init: Callable[[jax.Array], Any]
+    loss: Callable[[Any, dict], tuple]
+    prefill: Callable
+    decode_step: Callable
+    init_decode_state: Callable
+
+    @property
+    def model(self) -> ModelConfig:
+        return self.cfg.model
+
+
+def build_model(cfg: RunConfig) -> ModelApi:
+    m, e, p = cfg.model, cfg.engine, cfg.parallel
+    if m.family in _TRANSFORMER_FAMILIES:
+        mod = transformer
+    elif m.family in ("ssm", "hybrid"):
+        mod = ssm_lm
+    else:
+        raise ValueError(f"unknown family {m.family!r}")
+
+    return ModelApi(
+        cfg=cfg,
+        init=lambda rng: mod.init_params(m, rng),
+        loss=lambda params, batch: mod.loss_fn(params, batch, m, e, p),
+        prefill=lambda params, tokens, state: mod.prefill(
+            params, tokens, m, e, p, state),
+        decode_step=lambda params, token, state: mod.decode_step(
+            params, token, m, e, p, state),
+        init_decode_state=lambda batch, max_seq, dtype=None:
+            mod.init_decode_state(m, batch, max_seq, dtype),
+    )

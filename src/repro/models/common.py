@@ -1,0 +1,116 @@
+"""Shared model plumbing: the matrix-engine dispatch + init helpers.
+
+Every GEMM in every model routes through :func:`matmul`, which selects the
+engine per config -- ``xla`` (jnp.dot, used for dry-run/roofline since
+Mosaic doesn't lower on CPU) or ``pallas_rasa`` (the RASA-scheduled Pallas
+kernel from ``repro.kernels``, interpret-mode on CPU).  This is how the
+paper's technique is a first-class feature of the framework.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..config import EngineConfig, ModelConfig
+from ..kernels import GemmBlocks, rasa_matmul
+
+
+def matmul(x: jax.Array, w: jax.Array, engine: EngineConfig | None = None,
+           out_dtype=None) -> jax.Array:
+    """x [..., K] @ w [K, N] with fp32 accumulation, cast to out_dtype
+    (default: x.dtype)."""
+    out_dtype = out_dtype or x.dtype
+    if engine is not None and engine.kind == "pallas_rasa":
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        blocks = GemmBlocks(engine.block_m, engine.block_k, engine.block_n)
+        out = rasa_matmul(x2, w, schedule=engine.schedule, blocks=blocks)
+        return out.reshape(*lead, w.shape[-1]).astype(out_dtype)
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def he_init(key, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = (2.0 / max(fan_in, 1)) ** 0.5
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape,
+                                                jnp.float32)).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+class KeyGen:
+    """Deterministic named key derivation (stable across processes --
+    crc32, NOT python hash(), which is randomized per process and would
+    break checkpoint-restore reproducibility)."""
+
+    def __init__(self, root: jax.Array):
+        self.root = root
+
+    def __call__(self, name: str) -> jax.Array:
+        import zlib
+        return jax.random.fold_in(self.root, zlib.crc32(name.encode()))
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  ignore_index: int = -100) -> tuple[jax.Array, jax.Array]:
+    """Mean CE over valid labels (fp32).  logits [..., V], labels [...]."""
+    logits = logits.astype(jnp.float32)
+    valid = labels != ignore_index
+    safe = jnp.where(valid, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - ll) * valid
+    n = jnp.maximum(valid.sum(), 1)
+    return nll.sum() / n, n
+
+
+def chunked_cross_entropy(x: jax.Array, head_w: jax.Array,
+                          labels: jax.Array, *, chunk: int = 256,
+                          ignore_index: int = -100,
+                          logits_fn=None) -> tuple[jax.Array, jax.Array]:
+    """CE of matmul(x, head_w) without materializing full-sequence logits.
+
+    x: [B, S, D]; head_w: [D, V]; labels: [B, S] (or [B, S, cb] with
+    logits_fn reshaping).  Scans over S-chunks with remat, so peak memory
+    holds one [B, chunk, V] logits block instead of [B, S, V] -- the
+    difference between 18.5 GiB/dev and ~7 GiB/dev on the 256k-vocab
+    gemma train cells (EXPERIMENTS.md §Perf).
+    """
+    b, s = x.shape[0], x.shape[1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    xs = x.reshape(b, nc, chunk, -1).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, nc, chunk, *labels.shape[2:]).transpose(1, 0, 2,
+                                                                   *range(3, labels.ndim + 1))
+
+    @jax.checkpoint
+    def chunk_loss(x_c, l_c):
+        logits = jnp.dot(x_c, head_w,
+                         preferred_element_type=jnp.float32)
+        if logits_fn is not None:
+            logits = logits_fn(logits)
+        valid = l_c != ignore_index
+        safe = jnp.where(valid, l_c, 0)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        return ((logz - ll) * valid).sum(), valid.sum()
+
+    def body(carry, inp):
+        tot, n = carry
+        x_c, l_c = inp
+        dt, dn = chunk_loss(x_c, l_c)
+        return (tot + dt, n + dn), None
+
+    (tot, n), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+        (xs, ls))
+    n = jnp.maximum(n, 1)
+    return tot / n, n

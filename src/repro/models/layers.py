@@ -1,0 +1,261 @@
+"""Core layers: norms, rotary embeddings (incl. M-RoPE), attention, MLPs.
+
+All functions are pure; per-layer parameter dicts come in without the
+stacked layer dim (transformer.py scans over it).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..config import EngineConfig, ModelConfig
+from ..distributed.sharding import constrain
+from .common import matmul
+
+# --------------------------------------------------------------------- norms
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))
+            ).astype(x.dtype)
+
+
+# --------------------------------------------------------------------- rope
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float,
+                sections: tuple[int, ...] | None = None) -> tuple[jax.Array, jax.Array]:
+    """sin/cos tables.
+
+    positions: [B, S] (standard) or [3, B, S] (M-RoPE: temporal/height/width
+    streams).  With M-RoPE, the head_dim/2 frequency slots are split into
+    ``sections`` (e.g. 16/24/24 for qwen2-vl), each driven by its own
+    position stream -- text tokens pass identical t/h/w so M-RoPE reduces
+    to standard RoPE for them.
+    Returns sin, cos of shape [B, S, head_dim//2].
+    """
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 2:            # standard
+        ang = positions.astype(jnp.float32)[..., None] * freqs  # [B,S,half]
+    else:                              # m-rope: [3, B, S]
+        assert sections is not None and sum(sections) == half
+        ang_streams = positions.astype(jnp.float32)[..., None] * freqs  # [3,B,S,half]
+        parts = []
+        start = 0
+        for i, sec in enumerate(sections):
+            parts.append(ang_streams[i, :, :, start:start + sec])
+            start += sec
+        ang = jnp.concatenate(parts, axis=-1)
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x: [B, S, H, hd]; sin/cos: [B, S, hd//2] (broadcast over heads)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    sin = sin[:, :, None, :]
+    cos = cos[:, :, None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1).astype(x.dtype)
+
+
+# ----------------------------------------------------------------- attention
+
+def chunked_causal_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                             *, scale: float, q_chunk: int = 1024,
+                             kv_chunk: int = 2048,
+                             logit_softcap: float = 0.0) -> jax.Array:
+    """Memory-efficient causal attention in pure jnp (flash-style online
+    softmax over kv chunks, scanned over q chunks).  The XLA path for
+    training/prefill; the Pallas kernel replaces it on real TPUs.
+
+    q: [B, H, Sq, d], k/v: [B, H, Skv, d] with Skv == Sq (self-attention).
+    """
+    b, h, s, d = q.shape
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, s)
+    assert s % q_chunk == 0 and s % kv_chunk == 0
+    nq, nk = s // q_chunk, s // kv_chunk
+
+    qs = q.reshape(b, h, nq, q_chunk, d).transpose(2, 0, 1, 3, 4)
+    ks = k.reshape(b, h, nk, kv_chunk, d).transpose(2, 0, 1, 3, 4)
+    vs = v.reshape(b, h, nk, kv_chunk, d).transpose(2, 0, 1, 3, 4)
+
+    def q_step(_, qi_blk):
+        qi, qblk = qi_blk
+        qf = qblk.astype(jnp.float32) * scale
+
+        # flash-style backward: recompute the [bq, bkv] probability block
+        # instead of storing it -- without this, differentiating the scan
+        # keeps every p block alive (8+ GiB/layer at 4k seq; EXPERIMENTS.md
+        # §Perf memory iteration)
+        @jax.checkpoint
+        def kv_step(carry, kj_blk):
+            m_p, l_p, acc = carry
+            kj, kblk, vblk = kj_blk
+            s_ij = jnp.einsum("bhqd,bhkd->bhqk", qf,
+                              kblk.astype(jnp.float32),
+                              preferred_element_type=jnp.float32)
+            if logit_softcap:
+                s_ij = logit_softcap * jnp.tanh(s_ij / logit_softcap)
+            rows = qi * q_chunk + jax.lax.broadcasted_iota(
+                jnp.int32, (q_chunk, kv_chunk), 0)
+            cols = kj * kv_chunk + jax.lax.broadcasted_iota(
+                jnp.int32, (q_chunk, kv_chunk), 1)
+            s_ij = jnp.where(rows[None, None] >= cols[None, None], s_ij, -1e30)
+            m_c = jnp.maximum(m_p, jnp.max(s_ij, axis=-1, keepdims=True))
+            p = jnp.exp(s_ij - m_c)
+            alpha = jnp.exp(m_p - m_c)
+            l_c = l_p * alpha + p.sum(axis=-1, keepdims=True)
+            acc = acc * alpha + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, vblk.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+            return (m_c, l_c, acc), None
+
+        init = (jnp.full((b, h, q_chunk, 1), -1e30, jnp.float32),
+                jnp.zeros((b, h, q_chunk, 1), jnp.float32),
+                jnp.zeros((b, h, q_chunk, d), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, init, (jnp.arange(nk), ks, vs))
+        out = acc / jnp.maximum(l, 1e-30)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qs))
+    return outs.transpose(1, 2, 0, 3, 4).reshape(b, h, s, d)
+
+
+@dataclasses.dataclass
+class KVCache:
+    """Decode-time cache: k/v [B, Hkv, S_max, hd]; length = filled prefix."""
+    k: jax.Array
+    v: jax.Array
+    length: jax.Array        # scalar int32
+
+    def tree_flatten(self):
+        return (self.k, self.v, self.length), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    KVCache, KVCache.tree_flatten, KVCache.tree_unflatten)
+
+
+def gqa_expand(x: jax.Array, n_heads: int) -> jax.Array:
+    """[B, Hkv, ...] -> [B, H, ...] by repeating kv groups."""
+    hkv = x.shape[1]
+    if hkv == n_heads:
+        return x
+    return jnp.repeat(x, n_heads // hkv, axis=1)
+
+
+def attention_block(p: dict, x: jax.Array, cfg: ModelConfig,
+                    engine: EngineConfig,
+                    sin: jax.Array, cos: jax.Array,
+                    cache: Optional[KVCache] = None) -> tuple[jax.Array, Optional[KVCache]]:
+    """Pre-norm attention residual branch.
+
+    Training/prefill: cache is None -> chunked causal attention over x.
+    Decode: x is [B, 1, D]; cache holds the past -> returns updated cache.
+    """
+    b, s, d_model = x.shape
+    hd = cfg.resolved_head_dim
+    h, hkv = cfg.n_heads, cfg.n_kv_heads
+
+    q = matmul(x, p["wq"], engine).reshape(b, s, h, hd)
+    k = matmul(x, p["wk"], engine).reshape(b, s, hkv, hd)
+    v = matmul(x, p["wv"], engine).reshape(b, s, hkv, hd)
+
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.rms_eps)
+        k = rms_norm(k, p["k_norm"], cfg.rms_eps)
+    if cfg.rope != "none":
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+
+    q = q.transpose(0, 2, 1, 3)      # [B, H, S, hd]
+    k = k.transpose(0, 2, 1, 3)      # [B, Hkv, S, hd]
+    v = v.transpose(0, 2, 1, 3)
+    scale = hd ** -0.5
+
+    if cache is None or s > 1:
+        # training, or prefill (cache filled from position 0; the chunked
+        # kernel attends over exactly the causal prefix being written)
+        if cache is not None:
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache.k, k.astype(cache.k.dtype), 0, axis=2)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache.v, v.astype(cache.v.dtype), 0, axis=2)
+            cache = KVCache(ck, cv, jnp.asarray(s, jnp.int32))
+        # NOTE: q/k/v deliberately carry no explicit head constraint here --
+        # XLA's propagation from the wq/wk/wv column sharding is strictly
+        # better than forcing "bhsd" (measured: +7 GiB/dev from involuntary
+        # remat copies when heads < model axis; EXPERIMENTS.md §Perf).
+        kf = gqa_expand(k, h)
+        vf = gqa_expand(v, h)
+        out = chunked_causal_attention(q, kf, vf, scale=scale,
+                                       q_chunk=engine.attn_q_chunk,
+                                       kv_chunk=engine.attn_kv_chunk,
+                                       logit_softcap=cfg.logit_softcap)
+    else:
+        # single-token decode: append to cache, attend over valid prefix.
+        # GQA without cache expansion: queries grouped per kv head --
+        # expanding + f32-casting a 32k cache costs ~6x the cache itself
+        # (22 GiB/dev on the grok decode cell; EXPERIMENTS.md §Perf).
+        pos = cache.length
+        ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), pos, axis=2)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), pos, axis=2)
+        cache = KVCache(ck, cv, pos + s)
+        group = h // hkv
+        qg = q.reshape(b, hkv, group * s, hd).astype(jnp.float32) * scale
+        logits = jnp.einsum("bhqd,bhkd->bhqk", qg, ck.astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+        if cfg.logit_softcap:
+            logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+        smax = ck.shape[2]
+        # queries are (group-major) the s new positions repeated per group
+        qpos = pos + jnp.tile(jnp.arange(s), group)
+        mask = jnp.arange(smax)[None, None, None, :] <= qpos[None, None, :, None]
+        logits = jnp.where(mask, logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhqk,bhkd->bhqd", probs,
+                         cv.astype(jnp.float32)).astype(x.dtype)
+        out = out.reshape(b, h, s, hd)
+
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+    return matmul(out, p["wo"], engine), cache
+
+
+# ----------------------------------------------------------------------- mlp
+
+def mlp_block(p: dict, x: jax.Array, cfg: ModelConfig,
+              engine: EngineConfig) -> jax.Array:
+    act = cfg.act
+    if act in ("swiglu", "geglu"):
+        if "w_gate_up" in p:
+            # fused gate+up: one GEMM, x read once (WL-skip analogue; §Perf)
+            gu = jnp.einsum("bsd,dgf->bsgf", x, p["w_gate_up"],
+                            preferred_element_type=jnp.float32).astype(x.dtype)
+            g, u = gu[:, :, 0], gu[:, :, 1]
+        else:
+            g = matmul(x, p["w_gate"], engine)
+            u = matmul(x, p["w_up"], engine)
+        g = jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g, approximate=True)
+        h = constrain(g * u, "btf")
+    else:
+        u = matmul(x, p["w_up"], engine)
+        if act == "relu2":               # nemotron squared-ReLU
+            u = jnp.square(jax.nn.relu(u))
+        else:
+            u = jax.nn.gelu(u, approximate=True)
+        h = constrain(u, "btf")
+    return matmul(h, p["w_down"], engine)

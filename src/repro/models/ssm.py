@@ -1,0 +1,204 @@
+"""Mamba2 (SSD -- state-space duality) blocks, chunked for MXU-friendliness.
+
+The chunked SSD algorithm (Dao & Gu, 2024) decomposes the selective-scan
+into per-chunk *matmuls* (intra-chunk quadratic term + inter-chunk state
+recurrence), which is exactly the GEMM-shaped compute the RASA engine
+accelerates -- see DESIGN.md §Arch-applicability.
+
+Layer = in_proj -> short causal conv (x, B, C) -> SSD -> gated RMSNorm ->
+out_proj.  Decode keeps (conv window, SSM state) per layer: O(1) per token,
+which is why the ssm/hybrid archs run the long_500k shape.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..config import EngineConfig, ModelConfig
+from .common import matmul
+from .layers import rms_norm
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array     # [B, d_conv-1, conv_channels]
+    ssm: jax.Array      # [B, H, P, N]
+
+
+def ssm_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, n_heads, conv_ch
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    s = cfg.ssm
+    d_inner, n_heads, _ = ssm_dims(cfg)
+    gn = s.n_groups * s.d_state
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * gn], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv1d, window k.  xbc: [B, S, C]; w: [k, C].
+
+    With `state` ([B, k-1, C], the trailing window of the previous tokens)
+    this is the streaming/decode form; returns (out, new_state).
+    """
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)            # [B, S+k-1, C]
+    out = sum(xp[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    out = jax.nn.silu(out + b[None, None, :])
+    new_state = xp[:, -(k - 1):, :]
+    return out, new_state
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array,
+                B: jax.Array, C: jax.Array, chunk: int,
+                init_state: jax.Array | None = None,
+                unroll: bool = False):
+    """Chunked SSD as a checkpointed scan over chunks.
+
+    x:  [b, s, h, p]   inputs per head
+    dt: [b, s, h]      positive step sizes
+    A:  [h]            negative decay rates
+    B:  [b, s, g, n]   input projections (groups broadcast over heads)
+    C:  [b, s, g, n]   output projections
+    Returns y [b, s, h, p] and the final state [b, h, p, n].
+
+    One chunk is processed at a time and the body is rematerialized in the
+    backward pass -- materializing all [b, nc, h, q, q] intra-chunk score
+    matrices at once costs 26 GiB/dev on the zamba2 train cell vs ~1 GiB
+    this way (EXPERIMENTS.md §Perf).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert s % chunk == 0
+    nc = s // chunk
+    rep = h // g
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    # per-chunk leading axis for the scan: [nc, b, q, ...]
+    xc = x.reshape(b, nc, chunk, h, p).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(b, nc, chunk, h).transpose(1, 0, 2, 3)
+    Bc = B.reshape(b, nc, chunk, g, n).transpose(1, 0, 2, 3, 4)
+    Cc = C.reshape(b, nc, chunk, g, n).transpose(1, 0, 2, 3, 4)
+
+    @jax.checkpoint
+    def chunk_body(state, inp):
+        x_c, dt_c, B_c, C_c = inp              # [b,q,h,p],[b,q,h],[b,q,g,n]x2
+        B_h = jnp.repeat(B_c, rep, axis=2)     # [b,q,h,n]
+        C_h = jnp.repeat(C_c, rep, axis=2)
+        dA = dt_c * A[None, None, :]           # [b,q,h] (negative)
+        seg = jnp.cumsum(dA, axis=1)           # within-chunk cumsum
+        # fold dt_j into x_j ONCE ([b,q,h,p]) instead of scaling the
+        # [b,h,q,q] score matrix by dt_j -- algebraically identical,
+        # removes the largest intermediate's extra pass (§Perf zamba2)
+        xdt = (x_c.astype(jnp.float32)
+               * dt_c[..., None]).astype(x.dtype)  # [b,q,h,p]
+
+        # intra-chunk: scores[i,j] = C_i.B_j exp(seg_i - seg_j), i>=j
+        cb = jnp.einsum("bihn,bjhn->bhij", C_h, B_h,
+                        preferred_element_type=jnp.float32)
+        segh = seg.transpose(0, 2, 1)          # [b,h,q]
+        diff = segh[..., :, None] - segh[..., None, :]
+        # mask the exponent BEFORE exp: no inf*0 NaNs in gradients
+        diff = jnp.where(mask[None, None], diff, -1e30)
+        w_ij = cb * jnp.exp(diff)
+        y_intra = jnp.einsum("bhij,bjhp->bihp", w_ij.astype(x.dtype), xdt,
+                             preferred_element_type=jnp.float32)
+
+        # inter-chunk: y_i += C_i . state_prev * exp(seg_i)
+        y_inter = jnp.einsum("bihn,bhpn,bih->bihp", C_h,
+                             state.astype(x.dtype),
+                             jnp.exp(seg).astype(x.dtype),
+                             preferred_element_type=jnp.float32)
+
+        # chunk state + recurrence
+        last = seg[:, -1:, :]                  # [b,1,h]
+        wj = jnp.exp(last - seg).astype(x.dtype)            # [b,q,h]
+        st_c = jnp.einsum("bjhn,bjhp,bjh->bhpn", B_h, xdt, wj,
+                          preferred_element_type=jnp.float32)
+        decay = jnp.exp(last[:, 0, :])         # [b,h]
+        new_state = state * decay[:, :, None, None] + st_c
+        return new_state, (y_intra + y_inter).astype(x.dtype)
+
+    init = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+            else init_state.astype(jnp.float32))
+    final_state, ys = jax.lax.scan(chunk_body, init, (xc, dtc, Bc, Cc),
+                                   unroll=nc if unroll else 1)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    return y, final_state
+
+
+def mamba2_block(p: dict, x: jax.Array, cfg: ModelConfig,
+                 engine: EngineConfig,
+                 state: SSMState | None = None) -> tuple[jax.Array, SSMState | None]:
+    """Full Mamba2 residual branch.  Training (state=None): chunked SSD.
+    Decode: single-token recurrent update (x is [B, 1, D])."""
+    s_cfg = cfg.ssm
+    d_inner, n_heads, conv_ch = ssm_dims(cfg)
+    b, s, _ = x.shape
+    hdim, nst, g = s_cfg.head_dim, s_cfg.d_state, s_cfg.n_groups
+
+    zxbcdt = matmul(x, p["in_proj"], engine)
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if state is None or s > 1:
+        # training (state None) or prefill (state carried through chunks)
+        conv_in = None if state is None else state.conv
+        xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_in)
+        x_in, B, C = jnp.split(xbc, [d_inner, d_inner + g * nst], axis=-1)
+        xh = x_in.reshape(b, s, n_heads, hdim)
+        Bh = B.reshape(b, s, g, nst)
+        Ch = C.reshape(b, s, g, nst)
+        chunk = min(s_cfg.chunk, s)
+        assert s % chunk == 0, f"prefill length {s} % chunk {chunk} != 0"
+        y, final = ssd_chunked(xh, dt, A, Bh, Ch, chunk,
+                               None if state is None else state.ssm,
+                               unroll=engine.unroll_ssd)
+        new_state = (None if state is None
+                     else SSMState(conv=conv_state, ssm=final))
+    else:
+        xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                       state.conv)
+        x_in, B, C = jnp.split(xbc, [d_inner, d_inner + g * nst], axis=-1)
+        xh = x_in.reshape(b, s, n_heads, hdim)
+        Bh = jnp.repeat(B.reshape(b, s, g, nst), n_heads // g, axis=2)
+        Ch = jnp.repeat(C.reshape(b, s, g, nst), n_heads // g, axis=2)
+        # s == 1: recurrent update
+        dA = jnp.exp(dt[:, 0] * A[None, :])                       # [B, H]
+        st = (state.ssm * dA[:, :, None, None]
+              + jnp.einsum("bhn,bhp,bh->bhpn", Bh[:, 0], xh[:, 0],
+                           dt[:, 0], preferred_element_type=jnp.float32))
+        y = jnp.einsum("bhn,bhpn->bhp", Ch[:, 0], st.astype(x.dtype),
+                       preferred_element_type=jnp.float32)
+        y = y[:, None].astype(x.dtype).reshape(b, s, n_heads, hdim)
+        new_state = SSMState(conv=conv_state, ssm=st.astype(jnp.float32))
+
+    y = y + p["D_skip"].astype(x.dtype)[None, None, :, None] \
+        * xh.astype(x.dtype)
+    y = y.reshape(b, s, d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["ssm_norm"], cfg.rms_eps)
+    return matmul(y, p["out_proj"], engine), new_state
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int) -> SSMState:
+    s = cfg.ssm
+    d_inner, n_heads, conv_ch = ssm_dims(cfg)
+    return SSMState(
+        conv=jnp.zeros((batch, s.d_conv - 1, conv_ch), jnp.dtype(cfg.dtype)),
+        ssm=jnp.zeros((batch, n_heads, s.head_dim, s.d_state), jnp.float32))

@@ -1,0 +1,287 @@
+"""Pure-SSM language model (mamba2-130m) and the Zamba2-style hybrid.
+
+hybrid (zamba2): all layers are Mamba2 blocks; ONE shared attention+MLP
+block (a single weight set) is applied after every ``attn_every`` Mamba
+layers -- each application keeps its own KV cache.  (The real Zamba2
+alternates two shared blocks and concatenates the original embedding into
+the shared-block input; we implement the single-shared-block form and note
+the simplification in DESIGN.md.)
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..config import EngineConfig, ModelConfig, ParallelConfig
+from ..distributed.sharding import constrain
+from .common import (KeyGen, chunked_cross_entropy, cross_entropy,
+                     embed_init, he_init, matmul)
+from .layers import KVCache, attention_block, mlp_block, rms_norm, rope_angles
+from .ssm import SSMState, init_ssm_state, mamba2_block, ssm_dims
+from .transformer import _remat, logits_from
+
+
+# ------------------------------------------------------------------- params
+
+def init_mamba_layer_params(cfg: ModelConfig, kg: KeyGen, dtype, n_layers: int) -> dict:
+    d = cfg.d_model
+    s = cfg.ssm
+    d_inner, n_heads, conv_ch = ssm_dims(cfg)
+    proj = 2 * d_inner + 2 * s.n_groups * s.d_state + n_heads
+    L = n_layers
+    return {
+        "norm1": jnp.zeros((L, d), dtype),
+        "in_proj": he_init(kg("in_proj"), (L, d, proj), dtype, fan_in=d),
+        "conv_w": he_init(kg("conv_w"), (L, s.d_conv, conv_ch), dtype,
+                          fan_in=s.d_conv),
+        "conv_b": jnp.zeros((L, conv_ch), dtype),
+        "dt_bias": jnp.zeros((L, n_heads), jnp.float32)
+        + jnp.log(jnp.expm1(jnp.linspace(0.001, 0.1, n_heads))[None]).astype(jnp.float32),
+        "A_log": jnp.broadcast_to(
+            jnp.log(jnp.arange(1, n_heads + 1, dtype=jnp.float32))[None],
+            (L, n_heads)).copy(),
+        "D_skip": jnp.ones((L, n_heads), jnp.float32),
+        "ssm_norm": jnp.zeros((L, d_inner), dtype),
+        "out_proj": he_init(kg("out_proj"), (L, d_inner, d), dtype,
+                            fan_in=d_inner),
+    }
+
+
+def init_shared_attn_params(cfg: ModelConfig, kg: KeyGen, dtype) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    p = {
+        "norm1": jnp.zeros((d,), dtype),
+        "wq": he_init(kg("s_wq"), (d, cfg.n_heads * hd), dtype, fan_in=d),
+        "wk": he_init(kg("s_wk"), (d, cfg.n_kv_heads * hd), dtype, fan_in=d),
+        "wv": he_init(kg("s_wv"), (d, cfg.n_kv_heads * hd), dtype, fan_in=d),
+        "wo": he_init(kg("s_wo"), (cfg.n_heads * hd, d), dtype,
+                      fan_in=cfg.n_heads * hd),
+        "norm2": jnp.zeros((d,), dtype),
+        "w_gate": he_init(kg("s_wg"), (d, cfg.d_ff), dtype, fan_in=d),
+        "w_up": he_init(kg("s_wu"), (d, cfg.d_ff), dtype, fan_in=d),
+        "w_down": he_init(kg("s_wd"), (cfg.d_ff, d), dtype, fan_in=cfg.d_ff),
+    }
+    return p
+
+
+def init_params(cfg: ModelConfig, rng: jax.Array) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    kg = KeyGen(rng)
+    params = {
+        "embedding": embed_init(kg("embed"), (cfg.vocab, cfg.d_model), dtype),
+        "layers": init_mamba_layer_params(cfg, kg, dtype, cfg.n_layers),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = he_init(kg("head"), (cfg.d_model, cfg.vocab),
+                                    dtype, fan_in=cfg.d_model)
+    if cfg.family == "hybrid":
+        params["shared_attn"] = init_shared_attn_params(cfg, kg, dtype)
+    return params
+
+
+# ------------------------------------------------------------------ forward
+
+class HybridState(NamedTuple):
+    ssm: SSMState              # stacked [L, ...] leaves
+    attn: KVCache              # stacked [n_apps, ...] leaves
+    position: jax.Array
+
+
+def _shared_block(params: dict, x, cfg, engine, sin, cos,
+                  cache: Optional[KVCache]):
+    sp = params["shared_attn"]
+    h = rms_norm(x, sp["norm1"], cfg.rms_eps)
+    attn_out, new_cache = attention_block(sp, h, cfg, engine, sin, cos, cache)
+    x = constrain(x + attn_out, "btd")
+    h = rms_norm(x, sp["norm2"], cfg.rms_eps)
+    x = constrain(x + mlp_block(sp, h, cfg, engine), "btd")
+    return x, new_cache
+
+
+def n_shared_apps(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.hybrid.attn_every if cfg.family == "hybrid" else 0
+
+
+def run_backbone(params: dict, x: jax.Array, cfg: ModelConfig,
+                 engine: EngineConfig, remat: str = "full",
+                 state: Optional[HybridState] = None,
+                 sin=None, cos=None, scan: bool = True):
+    """Scan Mamba2 layers; hybrid: shared attention every attn_every layers.
+
+    Training: state None.  Decode (x [B,1,D]): state carries per-layer SSM
+    states + per-application KV caches.  scan=False unrolls python loops
+    (reduced-depth roofline compiles).
+    """
+    L = cfg.n_layers
+
+    if not scan:
+        return _run_backbone_unrolled(params, x, cfg, engine, state, sin, cos)
+
+    def mamba_body(carry, layer_in):
+        h = carry
+        if state is None:
+            h2 = rms_norm(h, layer_in["norm1"], cfg.rms_eps)
+            out, _ = mamba2_block(layer_in, h2, cfg, engine)
+            return constrain(h + out, "btd"), None
+        params_l, st_l = layer_in
+        h2 = rms_norm(h, params_l["norm1"], cfg.rms_eps)
+        out, new_st = mamba2_block(params_l, h2, cfg, engine, st_l)
+        return constrain(h + out, "btd"), new_st
+
+    if cfg.family == "ssm":
+        if state is None:
+            x, _ = jax.lax.scan(_remat(mamba_body, remat), x, params["layers"])
+            return x, None
+        x, new_ssm = jax.lax.scan(mamba_body, x, (params["layers"], state.ssm))
+        return x, HybridState(ssm=new_ssm, attn=state.attn,
+                              position=state.position + x.shape[1])
+
+    # hybrid: groups of `attn_every` mamba layers + one shared attn block
+    every = cfg.hybrid.attn_every
+    n_groups = L // every
+    assert L % every == 0
+
+    def group_leaves(tree):
+        return jax.tree.map(
+            lambda a: a.reshape(n_groups, every, *a.shape[1:]), tree)
+
+    grouped = group_leaves(params["layers"])
+
+    if state is None:
+        def group_body(carry, params_g):
+            h = carry
+            # nested remat: each mamba layer inside the (checkpointed)
+            # group is itself checkpointed, otherwise the group backward
+            # holds six layers' in_proj activations (~8 GiB/dev on the
+            # zamba2 train cell; EXPERIMENTS.md §Perf)
+            h, _ = jax.lax.scan(_remat(mamba_body, remat), h, params_g)
+            h, _ = _shared_block(params, h, cfg, engine, sin, cos, None)
+            return h, None
+        x, _ = jax.lax.scan(_remat(group_body, remat), x, grouped)
+        return x, None
+
+    grouped_ssm = group_leaves(state.ssm)
+
+    def group_body(carry, inp):
+        h = carry
+        params_g, ssm_g, cache_g = inp
+        h, new_ssm_g = jax.lax.scan(mamba_body, h, (params_g, ssm_g))
+        h, new_cache_g = _shared_block(params, h, cfg, engine, sin, cos,
+                                       cache_g)
+        return h, (new_ssm_g, new_cache_g)
+
+    x, (new_ssm_g, new_caches) = jax.lax.scan(
+        group_body, x, (grouped, grouped_ssm, state.attn))
+    new_ssm = jax.tree.map(lambda a: a.reshape(L, *a.shape[2:]), new_ssm_g)
+    return x, HybridState(ssm=new_ssm, attn=new_caches,
+                          position=state.position + x.shape[1])
+
+
+def _run_backbone_unrolled(params, x, cfg, engine, state, sin, cos):
+    """Python-loop depth (roofline reduced-depth compiles)."""
+    every = cfg.hybrid.attn_every if cfg.family == "hybrid" else cfg.n_layers
+
+    def one_layer(h, i, st_l):
+        params_l = jax.tree.map(lambda a: a[i], params["layers"])
+        h2 = rms_norm(h, params_l["norm1"], cfg.rms_eps)
+        out, new_st = mamba2_block(params_l, h2, cfg, engine, st_l)
+        return constrain(h + out, "btd"), new_st
+
+    new_ssm, new_caches = [], []
+    for i in range(cfg.n_layers):
+        st_l = (jax.tree.map(lambda a: a[i], state.ssm)
+                if state is not None else None)
+        x, new_st = one_layer(x, i, st_l)
+        if state is not None:
+            new_ssm.append(new_st)
+        if cfg.family == "hybrid" and (i + 1) % every == 0:
+            app = i // every
+            cache_a = (jax.tree.map(lambda a: a[app], state.attn)
+                       if state is not None else None)
+            x, new_cache = _shared_block(params, x, cfg, engine, sin, cos,
+                                         cache_a)
+            if state is not None:
+                new_caches.append(new_cache)
+    if state is None:
+        return x, None
+    ssm_st = (jax.tree.map(lambda *xs: jnp.stack(xs), *new_ssm)
+              if new_ssm else state.ssm)
+    attn_st = (jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+               if new_caches else state.attn)
+    return x, HybridState(ssm=ssm_st, attn=attn_st,
+                          position=state.position + x.shape[1])
+
+
+def loss_fn(params: dict, batch: dict, cfg: ModelConfig,
+            engine: EngineConfig, parallel: ParallelConfig):
+    tokens = batch["tokens"]
+    x = constrain(params["embedding"][tokens], "btd")
+    sin = cos = None
+    if cfg.family == "hybrid":
+        b, s = tokens.shape
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        sin, cos = rope_angles(pos, cfg.resolved_head_dim, cfg.rope_theta)
+    x, _ = run_backbone(params, x, cfg, engine, remat=parallel.remat,
+                        sin=sin, cos=cos, scan=parallel.scan_layers)
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    head_w = (params["embedding"].T if cfg.tie_embeddings
+              else params["lm_head"])
+    ce, n_valid = chunked_cross_entropy(x, head_w, batch["labels"],
+                                        chunk=engine.ce_chunk)
+    return ce, {"ce": ce, "aux_loss": 0.0, "n_valid": n_valid}
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int,
+                      dtype=None) -> HybridState:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    s = cfg.ssm
+    d_inner, n_heads, conv_ch = ssm_dims(cfg)
+    L = cfg.n_layers
+    ssm = SSMState(
+        conv=jnp.zeros((L, batch, s.d_conv - 1, conv_ch), dtype),
+        ssm=jnp.zeros((L, batch, n_heads, s.head_dim, s.d_state),
+                      jnp.float32))
+    apps = n_shared_apps(cfg)
+    if apps:
+        hd = cfg.resolved_head_dim
+        shape = (apps, batch, cfg.n_kv_heads, max_seq, hd)
+        attn = KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                       length=jnp.zeros((apps,), jnp.int32))
+    else:
+        attn = KVCache(k=jnp.zeros((0,)), v=jnp.zeros((0,)),
+                       length=jnp.zeros((0,), jnp.int32))
+    return HybridState(ssm=ssm, attn=attn, position=jnp.zeros((), jnp.int32))
+
+
+def prefill(params: dict, tokens: jax.Array, cfg: ModelConfig,
+            engine: EngineConfig, parallel: ParallelConfig,
+            state: HybridState):
+    b, s = tokens.shape
+    x = constrain(params["embedding"][tokens], "btd")
+    sin = cos = None
+    if cfg.family == "hybrid":
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        sin, cos = rope_angles(pos, cfg.resolved_head_dim, cfg.rope_theta)
+    x, new_state = run_backbone(params, x, cfg, engine, state=state,
+                                sin=sin, cos=cos, scan=parallel.scan_layers)
+    logits = logits_from(params, cfg, x[:, -1:], engine)
+    return logits[:, 0], new_state
+
+
+def decode_step(params: dict, token: jax.Array, cfg: ModelConfig,
+                engine: EngineConfig, parallel: ParallelConfig,
+                state: HybridState):
+    b = token.shape[0]
+    x = params["embedding"][token[:, None]]
+    sin = cos = None
+    if cfg.family == "hybrid":
+        pos = jnp.broadcast_to(state.position[None, None], (b, 1))
+        sin, cos = rope_angles(pos, cfg.resolved_head_dim, cfg.rope_theta)
+    x, new_state = run_backbone(params, x, cfg, engine, state=state,
+                                sin=sin, cos=cos, scan=parallel.scan_layers)
+    logits = logits_from(params, cfg, x, engine)
+    return logits[:, 0], new_state

@@ -1,0 +1,317 @@
+"""Decoder-only transformer backbone: dense / MoE / VLM / audio families.
+
+Parameters are stacked over layers ([L, ...] leading dim) and the forward
+pass scans over them with a configurable remat policy -- this keeps the HLO
+size O(1) in depth (essential for the 80-layer dry-runs) and is the
+standard production pattern (MaxText-style).
+
+Families:
+  dense          -- plain GQA decoder (nemotron / qwen3 / gemma)
+  moe            -- GQA decoder + top-k MoE FFN (grok / granite)
+  vlm            -- dense + stub patch-embedding frontend, M-RoPE (qwen2-vl)
+  audio          -- dense over summed EnCodec codebook embeddings with one
+                    lm head per codebook (musicgen)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..config import EngineConfig, ModelConfig, ParallelConfig
+from ..distributed.sharding import constrain
+from .common import (KeyGen, chunked_cross_entropy, cross_entropy,
+                     embed_init, he_init, matmul)
+from .layers import (KVCache, attention_block, mlp_block, rms_norm,
+                     rope_angles)
+from .moe import moe_block
+
+def mrope_sections(head_dim: int) -> tuple[int, int, int]:
+    """Temporal/height/width frequency splits, proportioned like qwen2-vl
+    (16/24/24 of the 64 half-dims at head_dim=128)."""
+    half = head_dim // 2
+    t = half // 4
+    h = (half - t) // 2
+    return (t, h, half - t - h)
+
+
+# ------------------------------------------------------------------- params
+
+def init_layer_params(cfg: ModelConfig, kg: KeyGen, dtype) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    L = cfg.n_layers
+    p = {
+        "norm1": jnp.zeros((L, d), dtype),
+        "wq": he_init(kg("wq"), (L, d, cfg.n_heads * hd), dtype, fan_in=d),
+        "wk": he_init(kg("wk"), (L, d, cfg.n_kv_heads * hd), dtype, fan_in=d),
+        "wv": he_init(kg("wv"), (L, d, cfg.n_kv_heads * hd), dtype, fan_in=d),
+        "wo": he_init(kg("wo"), (L, cfg.n_heads * hd, d), dtype,
+                      fan_in=cfg.n_heads * hd),
+        "norm2": jnp.zeros((L, d), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((L, hd), dtype)
+        p["k_norm"] = jnp.zeros((L, hd), dtype)
+    if cfg.moe is not None:
+        e, fe = cfg.moe.n_experts, cfg.moe.d_ff_expert
+        p["router"] = he_init(kg("router"), (L, d, e), dtype, fan_in=d)
+        if cfg.fuse_gate_up:
+            # [L, E, D, 2, Fe]: gate/up axis unsharded (cf. w_gate_up)
+            p["experts_w_gate_up"] = he_init(kg("ewgu"), (L, e, d, 2, fe),
+                                             dtype, fan_in=d)
+        else:
+            p["experts_w_gate"] = he_init(kg("ewg"), (L, e, d, fe), dtype,
+                                          fan_in=d)
+            p["experts_w_up"] = he_init(kg("ewu"), (L, e, d, fe), dtype,
+                                        fan_in=d)
+        p["experts_w_down"] = he_init(kg("ewd"), (L, e, fe, d), dtype, fan_in=fe)
+    else:
+        f = cfg.d_ff
+        gated = cfg.act in ("swiglu", "geglu")
+        if gated and cfg.fuse_gate_up:
+            # [L, D, 2, F]: the 2 (gate/up) axis is unsharded, so the
+            # post-GEMM split never reshards the model-sharded F dim
+            p["w_gate_up"] = he_init(kg("wgu"), (L, d, 2, f), dtype, fan_in=d)
+        else:
+            if gated:
+                p["w_gate"] = he_init(kg("wg"), (L, d, f), dtype, fan_in=d)
+            p["w_up"] = he_init(kg("wu"), (L, d, f), dtype, fan_in=d)
+        p["w_down"] = he_init(kg("wd"), (L, f, d), dtype, fan_in=f)
+    return p
+
+
+def init_params(cfg: ModelConfig, rng: jax.Array) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    kg = KeyGen(rng)
+    d = cfg.d_model
+    vocab_in = cfg.vocab * (cfg.n_codebooks if cfg.family == "audio" else 1)
+    params = {
+        "embedding": embed_init(kg("embed"), (vocab_in, d), dtype),
+        "layers": init_layer_params(cfg, kg, dtype),
+        "final_norm": jnp.zeros((d,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = he_init(
+            kg("head"), (d, cfg.vocab * cfg.n_codebooks), dtype, fan_in=d)
+    if cfg.frontend == "vision":
+        # stub patch projection: precomputed patch features -> d_model
+        params["patch_proj"] = he_init(kg("patch"), (d, d), dtype, fan_in=d)
+    return params
+
+
+# ------------------------------------------------------------------ blocks
+
+def decoder_block(params_l: dict, x: jax.Array, cfg: ModelConfig,
+                  engine: EngineConfig, sin, cos,
+                  cache: Optional[KVCache] = None):
+    """Pre-norm block; returns (x, new_cache, aux_loss)."""
+    h = rms_norm(x, params_l["norm1"], cfg.rms_eps)
+    attn_out, new_cache = attention_block(params_l, h, cfg, engine, sin, cos,
+                                          cache)
+    x = constrain(x + attn_out, "btd")
+    h = rms_norm(x, params_l["norm2"], cfg.rms_eps)
+    if cfg.moe is not None:
+        ffn_out, aux = moe_block(params_l, h, cfg, engine)
+    else:
+        ffn_out, aux = mlp_block(params_l, h, cfg, engine), 0.0
+    x = constrain(x + ffn_out, "btd")
+    return x, new_cache, aux
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.checkpoint(fn)
+
+
+def run_layers(params: dict, x: jax.Array, cfg: ModelConfig,
+               engine: EngineConfig, sin, cos, remat: str = "full",
+               caches: Optional[KVCache] = None, scan: bool = True):
+    """Scan the decoder stack.  caches: stacked KVCache ([L, ...] leaves) for
+    decode, or None for train/prefill.  scan=False unrolls a python loop
+    (reduced-depth roofline compiles -- cost_analysis counts a scan body
+    once, so totals need an unrolled artifact)."""
+    aux0 = jnp.zeros((), jnp.float32)
+
+    if not scan:
+        aux = aux0
+        new_caches = []
+        for i in range(cfg.n_layers):
+            params_l = jax.tree.map(lambda a: a[i], params["layers"])
+            cache_l = (jax.tree.map(lambda a: a[i], caches)
+                       if caches is not None else None)
+            x, nc, aux_l = decoder_block(params_l, x, cfg, engine, sin, cos,
+                                         cache_l)
+            aux = aux + aux_l
+            if caches is not None:
+                new_caches.append(nc)
+        if caches is None:
+            return x, None, aux
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches) \
+            if new_caches else caches
+        return x, stacked, aux
+
+    if caches is None:
+        def body(carry, params_l):
+            h, aux = carry
+            h, _, aux_l = decoder_block(params_l, h, cfg, engine, sin, cos)
+            return (h, aux + aux_l), None
+        (x, aux), _ = jax.lax.scan(_remat(body, remat), (x, aux0),
+                                   params["layers"])
+        return x, None, aux
+
+    def body(carry, layer_in):
+        params_l, cache_l = layer_in
+        h, aux = carry
+        h, new_cache, aux_l = decoder_block(params_l, h, cfg, engine,
+                                            sin, cos, cache_l)
+        return (h, aux + aux_l), new_cache
+
+    (x, aux), new_caches = jax.lax.scan(body, (x, aux0),
+                                        (params["layers"], caches))
+    return x, new_caches, aux
+
+
+# ---------------------------------------------------------------- embedding
+
+def embed_tokens(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                 patch_embeds: jax.Array | None = None) -> jax.Array:
+    """tokens: [B, S] (or [B, S, n_codebooks] for audio).  For the vlm
+    family, `patch_embeds` [B, P, D] (stub frontend output) is prepended."""
+    emb = params["embedding"]
+    if cfg.family == "audio":
+        # sum the per-codebook embeddings (offsets into one stacked table)
+        offsets = jnp.arange(cfg.n_codebooks) * cfg.vocab
+        x = emb[(tokens + offsets[None, None, :]).reshape(tokens.shape[0], -1)]
+        x = x.reshape(*tokens.shape, cfg.d_model).sum(axis=2)
+    else:
+        x = emb[tokens]
+    if cfg.family == "vlm" and patch_embeds is not None:
+        pe = matmul(patch_embeds.astype(x.dtype), params["patch_proj"])
+        x = jnp.concatenate([pe, x], axis=1)
+    return x
+
+
+def positions_for(cfg: ModelConfig, batch: int, seq: int,
+                  offset: jax.Array | int = 0) -> jax.Array:
+    pos = jnp.arange(seq)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if cfg.rope == "mrope":
+        # stub M-RoPE positions: text tokens use t == h == w (the qwen2-vl
+        # convention); real image grids would vary h/w per patch.
+        return jnp.broadcast_to(pos[None], (3, batch, seq))
+    return pos
+
+
+def logits_from(params: dict, cfg: ModelConfig, x: jax.Array,
+                engine: EngineConfig) -> jax.Array:
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    if cfg.tie_embeddings:
+        logits = matmul(x, params["embedding"].T, engine, out_dtype=jnp.float32)
+    else:
+        logits = matmul(x, params["lm_head"], engine, out_dtype=jnp.float32)
+    if cfg.family == "audio":
+        b, s, _ = logits.shape
+        return logits.reshape(b, s, cfg.n_codebooks, cfg.vocab)
+    return logits
+
+
+# ------------------------------------------------------------------- losses
+
+def loss_fn(params: dict, batch: dict, cfg: ModelConfig,
+            engine: EngineConfig, parallel: ParallelConfig):
+    """batch: tokens [B,S] (+ labels [B,S]; audio: [B,S,cb];
+    vlm: + patch_embeds [B,P,Dp])."""
+    tokens = batch["tokens"]
+    x = embed_tokens(params, cfg, tokens, batch.get("patch_embeds"))
+    x = constrain(x, "btd")
+    b, s = x.shape[0], x.shape[1]
+    pos = positions_for(cfg, b, s)
+    sin, cos = rope_angles(pos, cfg.resolved_head_dim, cfg.rope_theta,
+                           mrope_sections(cfg.resolved_head_dim) if cfg.rope == "mrope" else None)
+    x, _, aux = run_layers(params, x, cfg, engine, sin, cos,
+                           remat=parallel.remat, scan=parallel.scan_layers)
+    labels = batch["labels"]
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        # patch positions carry no next-token loss
+        pad = jnp.full(
+            (b, batch["patch_embeds"].shape[1]) + labels.shape[2:], -100,
+            labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+
+    # chunked CE: never materializes [B, S, V] logits (common.py)
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    head_w = (params["embedding"].T if cfg.tie_embeddings
+              else params["lm_head"])
+    logits_fn = None
+    if cfg.family == "audio":
+        logits_fn = lambda lg: lg.reshape(
+            *lg.shape[:-1], cfg.n_codebooks, cfg.vocab)
+    ce, n_valid = chunked_cross_entropy(x, head_w, labels,
+                                        chunk=engine.ce_chunk,
+                                        logits_fn=logits_fn)
+    loss = ce + aux
+    return loss, {"ce": ce, "aux_loss": aux, "n_valid": n_valid}
+
+
+# ------------------------------------------------------------------ serving
+
+class DecodeState(NamedTuple):
+    caches: KVCache            # stacked [L, ...] leaves
+    position: jax.Array        # [B] next position (uniform here)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int,
+                      dtype=None) -> DecodeState:
+    from ..distributed.sharding import current_ctx, kv_cache_spec
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_seq, hd)
+    k = jnp.zeros(shape, dtype)
+    v = jnp.zeros(shape, dtype)
+    caches = KVCache(k=k, v=v, length=jnp.zeros((cfg.n_layers,), jnp.int32))
+    return DecodeState(caches=caches, position=jnp.zeros((), jnp.int32))
+
+
+def prefill(params: dict, tokens: jax.Array, cfg: ModelConfig,
+            engine: EngineConfig, parallel: ParallelConfig,
+            state: DecodeState) -> tuple[jax.Array, DecodeState]:
+    """Run the prompt through the stack, filling the caches; returns logits
+    of the last position and the updated state."""
+    b, s = tokens.shape[0], tokens.shape[1]
+    x = embed_tokens(params, cfg, tokens)
+    pos = positions_for(cfg, b, s)
+    sin, cos = rope_angles(pos, cfg.resolved_head_dim, cfg.rope_theta,
+                           mrope_sections(cfg.resolved_head_dim) if cfg.rope == "mrope" else None)
+
+    # caches at length 0: attention_block's decode path writes k/v at [0, s)
+    x, new_caches, _ = run_layers(params, x, cfg, engine, sin, cos,
+                                  remat="none", caches=state.caches,
+                                  scan=parallel.scan_layers)
+    logits = logits_from(params, cfg, x[:, -1:], engine)
+    return logits[:, 0], DecodeState(caches=new_caches,
+                                     position=jnp.asarray(s, jnp.int32))
+
+
+def decode_step(params: dict, token: jax.Array, cfg: ModelConfig,
+                engine: EngineConfig, parallel: ParallelConfig,
+                state: DecodeState) -> tuple[jax.Array, DecodeState]:
+    """One decode step.  token: [B] (audio: [B, cb]) -> logits, new state."""
+    b = token.shape[0]
+    tok = token[:, None] if token.ndim == 1 else token[:, None, :]
+    x = embed_tokens(params, cfg, tok)
+    pos = positions_for(cfg, b, 1, offset=state.position)
+    sin, cos = rope_angles(pos, cfg.resolved_head_dim, cfg.rope_theta,
+                           mrope_sections(cfg.resolved_head_dim) if cfg.rope == "mrope" else None)
+    x, new_caches, _ = run_layers(params, x, cfg, engine, sin, cos,
+                                  remat="none", caches=state.caches,
+                                  scan=parallel.scan_layers)
+    logits = logits_from(params, cfg, x, engine)
+    return logits[:, 0], DecodeState(caches=new_caches,
+                                     position=state.position + 1)

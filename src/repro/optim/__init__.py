@@ -1,0 +1,9 @@
+"""Optimizers + schedules + gradient transforms (compression, clipping)."""
+
+from .adamw import AdamWState, adamw_init, adamw_update
+from .schedule import linear_warmup_cosine
+from .compression import compress_int8, decompress_int8, compressed_psum
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update",
+           "linear_warmup_cosine", "compress_int8", "decompress_int8",
+           "compressed_psum"]

@@ -1,0 +1,7 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+
+from .analysis import (HW, CellRoofline, analyze_cell, analyze_all,
+                       format_report)
+
+__all__ = ["HW", "CellRoofline", "analyze_cell", "analyze_all",
+           "format_report"]

@@ -1,0 +1,8 @@
+"""Serving substrate: batched prefill/decode + sequence-parallel decode."""
+
+from .engine import (ServeSession, decode_state_shardings, jit_decode_step,
+                     jit_prefill)
+from .sp_decode import sp_flash_decode
+
+__all__ = ["ServeSession", "decode_state_shardings", "jit_decode_step",
+           "jit_prefill", "sp_flash_decode"]

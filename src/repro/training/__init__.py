@@ -1,0 +1,7 @@
+"""Training substrate: step builder, fault-tolerant loop, straggler watch."""
+
+from .step import TrainState, build_train_step, init_train_state
+from .loop import TrainLoop, LoopConfig
+
+__all__ = ["TrainState", "build_train_step", "init_train_state",
+           "TrainLoop", "LoopConfig"]

@@ -1,0 +1,125 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes and no NaNs.  Also a decode-path smoke for
+each family (KV cache / SSM state correctness vs prefill)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import EngineConfig
+from repro.configs import ARCH_NAMES, get_config
+from repro.models import build_model
+
+
+def make_batch(cfg, rng, b=2, s=32):
+    m = cfg.model
+    if m.family == "audio":
+        toks = rng.integers(0, m.vocab, (b, s, m.n_codebooks)).astype(np.int32)
+        return {"tokens": jnp.asarray(toks), "labels": jnp.asarray(toks)}
+    toks = rng.integers(0, m.vocab, (b, s)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(toks)}
+    if m.family == "vlm":
+        batch["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(b, 8, m.d_model)), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_train_step_smoke(arch):
+    cfg = get_config(arch, smoke=True)
+    api = build_model(cfg)
+    params = api.init(jax.random.key(0))
+    batch = make_batch(cfg, np.random.default_rng(0))
+
+    loss, metrics = api.loss(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), f"{arch}: loss not finite"
+
+    # one SGD-ish gradient step must stay finite and reduce params sanely
+    grads = jax.grad(lambda p: api.loss(p, batch)[0])(params)
+    leaves = jax.tree.leaves(grads)
+    assert leaves, "no gradients"
+    for g in leaves:
+        assert np.all(np.isfinite(np.asarray(g, np.float32))), \
+            f"{arch}: non-finite grad"
+    new_params = jax.tree.map(lambda p, g: p - 1e-3 * g.astype(p.dtype),
+                              params, grads)
+    loss2, _ = api.loss(new_params, batch)
+    assert np.isfinite(float(loss2))
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_decode_matches_prefill(arch):
+    """Teacher-forced decode must reproduce prefill logits (cache/state
+    correctness), up to bf16 accumulation noise."""
+    cfg = get_config(arch, smoke=True)
+    m = cfg.model
+    api = build_model(cfg)
+    params = api.init(jax.random.key(1))
+    rng = np.random.default_rng(2)
+    b, s = 2, 8
+    if m.family == "audio":
+        toks = jnp.asarray(rng.integers(0, m.vocab, (b, s, m.n_codebooks)),
+                           jnp.int32)
+    else:
+        toks = jnp.asarray(rng.integers(0, m.vocab, (b, s)), jnp.int32)
+
+    # prefill on the full prompt
+    state = api.init_decode_state(b, max_seq=32)
+    logits_prefill, state_p = api.prefill(params, toks, state)
+
+    # decode token-by-token from a fresh state
+    state = api.init_decode_state(b, max_seq=32)
+    logits_steps = []
+    for i in range(s):
+        tok = toks[:, i]
+        logits_i, state = api.decode_step(params, tok, state)
+        logits_steps.append(logits_i)
+
+    # last-step decode logits == prefill logits of the last position
+    got = np.asarray(logits_steps[-1], np.float32)
+    want = np.asarray(logits_prefill, np.float32)
+    np.testing.assert_allclose(got, want, rtol=0.15, atol=0.15)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "granite-moe-3b-a800m",
+                                  "mamba2-130m"])
+def test_pallas_engine_integration(arch):
+    """The RASA Pallas engine (interpret mode) must agree with the XLA
+    engine on the same params/batch -- the paper's technique wired through
+    a real model end-to-end."""
+    cfg = get_config(arch, smoke=True)
+    api_xla = build_model(cfg)
+    params = api_xla.init(jax.random.key(0))
+    batch = make_batch(cfg, np.random.default_rng(1))
+    loss_xla, _ = api_xla.loss(params, batch)
+
+    import dataclasses
+    cfg_p = dataclasses.replace(
+        cfg, engine=EngineConfig(kind="pallas_rasa", schedule="wlbp",
+                                 block_m=128, block_k=128, block_n=128))
+    api_p = build_model(cfg_p)
+    loss_p, _ = api_p.loss(params, batch)
+    np.testing.assert_allclose(float(loss_xla), float(loss_p),
+                               rtol=0.02, atol=0.02)
+
+
+def test_param_counts_match_pool():
+    """Analytic parameter counts should land near the published sizes."""
+    import math
+    targets = {
+        "gemma-2b": (2.0e9, 3.0e9),        # 2.5B w/ embeddings
+        "gemma-7b": (7.5e9, 9.5e9),        # 8.5B w/ embeddings
+        "qwen3-1.7b": (1.4e9, 2.4e9),
+        "nemotron-4-15b": (14e9, 17e9),
+        "grok-1-314b": (290e9, 340e9),
+        "mamba2-130m": (0.10e9, 0.17e9),
+        "zamba2-2.7b": (2.2e9, 3.2e9),
+        "musicgen-large": (1.2e9, 2.6e9),
+        "granite-moe-3b-a800m": (2.5e9, 4.2e9),
+        "qwen2-vl-72b": (68e9, 78e9),
+    }
+    for arch, (lo, hi) in targets.items():
+        n = get_config(arch).model.param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]B"

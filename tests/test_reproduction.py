@@ -1,0 +1,116 @@
+"""End-to-end reproduction checks against the paper's published results.
+
+These are the headline claims of §V.  Where our simulator cannot be
+trace-identical to the paper's MacSim+SDE setup (we rebuilt the lowering;
+see EXPERIMENTS.md §Fig5) we assert the *bracketing*: the paper's number
+must lie between our reuse-hostile and reuse-maximizing register policies.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (DESIGNS, TABLE_I, normalized_runtime, simulate,
+                        sweep_designs, ALG1_POLICY, MAX_REUSE_POLICY)
+from repro.core.area import (AREA_OVERHEAD, PAPER_ENERGY_EFFICIENCY,
+                             PAPER_RUNTIME_REDUCTION, area_mm2,
+                             energy_efficiency, BASELINE_AREA_MM2)
+from repro.core.tiling import LOW_REUSE_POLICY
+from repro.core.workloads import batch_sweep
+
+# keep CI fast: a representative subset (benchmarks run the full Table I)
+FAST_WORKLOADS = ["DLRM-2", "BERT-1"]
+
+
+def test_pipe_reduction_close_to_paper():
+    """PIPE: paper 15.7% avg reduction; analytic bound 1-79/95 = 16.8%.
+    PIPE does not depend on the reuse pattern, so we expect a tight match."""
+    red = np.mean([1 - normalized_runtime(TABLE_I[w], "RASA-PIPE")
+                   for w in FAST_WORKLOADS])
+    assert red == pytest.approx(PAPER_RUNTIME_REDUCTION["RASA-PIPE"], abs=0.03)
+
+
+@pytest.mark.parametrize("design", ["RASA-WLBP", "RASA-DM-WLBP"])
+def test_reuse_sensitive_designs_bracket_paper(design):
+    """WLBP designs depend on the weight-reuse rate of the lowering: the
+    paper's reduction must fall between our reuse-hostile and
+    reuse-maximizing register policies."""
+    paper = PAPER_RUNTIME_REDUCTION[design]
+    lo = np.mean([1 - normalized_runtime(TABLE_I[w], design, LOW_REUSE_POLICY)
+                  for w in FAST_WORKLOADS])
+    hi = np.mean([1 - normalized_runtime(TABLE_I[w], design, MAX_REUSE_POLICY)
+                  for w in FAST_WORKLOADS])
+    assert min(lo, hi) - 0.02 <= paper <= max(lo, hi) + 0.02, \
+        f"{design}: paper {paper} outside [{lo:.3f}, {hi:.3f}]"
+
+
+@pytest.mark.parametrize("design", ["RASA-DB-WLS", "RASA-DMDB-WLS"])
+def test_wls_designs_close_to_paper(design):
+    """WLS hides WL regardless of reuse; our engine-only model is slightly
+    more optimistic than the paper's full-core trace simulation (no ROB /
+    frontend effects).  Require agreement within 6 points."""
+    paper = PAPER_RUNTIME_REDUCTION[design]
+    got = np.mean([1 - normalized_runtime(TABLE_I[w], design)
+                   for w in FAST_WORKLOADS])
+    assert got == pytest.approx(paper, abs=0.06), f"{design}: {got:.3f} vs {paper}"
+
+
+def test_relative_design_ordering():
+    """Fig. 5: BASE > PIPE > WLBP > DM-WLBP > DB-WLS ~= DMDB-WLS (runtime)."""
+    spec = TABLE_I["DLRM-1"]
+    r = {d: normalized_runtime(spec, d) for d in
+         ["RASA-PIPE", "RASA-WLBP", "RASA-DM-WLBP", "RASA-DB-WLS",
+          "RASA-DMDB-WLS"]}
+    assert 1.0 > r["RASA-PIPE"] > r["RASA-WLBP"] > r["RASA-DM-WLBP"]
+    assert r["RASA-DM-WLBP"] > r["RASA-DB-WLS"]
+    assert abs(r["RASA-DB-WLS"] - r["RASA-DMDB-WLS"]) < 0.05
+
+
+def test_batch_asymptote():
+    """Fig. 7: DMDB-WLS normalized runtime approaches 16/95 = 0.168 for
+    large batch, and small batches (<=16) all cost the same."""
+    sweep = batch_sweep(nin=512, non=512, batches=(1, 2, 4, 8, 16, 1024))
+    runs = {b: normalized_runtime(s, "RASA-DMDB-WLS") for b, s in sweep.items()}
+    small = [simulate(sweep[b], "RASA-DMDB-WLS").cycles for b in (1, 2, 4, 8, 16)]
+    assert max(small) == pytest.approx(min(small), rel=1e-6), \
+        "batches <=16 must use the same number of rasa_mm"
+    assert runs[1024] == pytest.approx(16 / 95, abs=0.02)
+
+
+def test_large_batch_mm_count_equal_small():
+    sweep = batch_sweep(nin=256, non=256, batches=(1, 16))
+    a = simulate(sweep[1], "BASE")
+    b = simulate(sweep[16], "BASE")
+    assert a.n_mm == b.n_mm        # 16 is the smallest granularity of work
+
+
+# ------------------------------------------------------------- area / energy
+def test_area_constants():
+    assert area_mm2("RASA-DMDB-WLS") == pytest.approx(0.847, abs=0.01)
+    assert BASELINE_AREA_MM2 == pytest.approx(0.803, abs=0.01)
+    assert AREA_OVERHEAD["DB"] == 1.031
+    assert AREA_OVERHEAD["DM"] == 1.026
+    assert AREA_OVERHEAD["DMDB"] == 1.055
+
+
+@pytest.mark.parametrize("opt,design,reduction", [
+    ("DB", "RASA-DB-WLS", 0.781),
+    ("DM", "RASA-DM-WLBP", 0.555),
+    ("DMDB", "RASA-DMDB-WLS", 0.792),
+])
+def test_energy_efficiency_model_reproduces_paper(opt, design, reduction):
+    """EE = speedup/area-overhead reproduces 4.38x/2.19x/4.59x within 2%."""
+    speedup = 1.0 / (1.0 - reduction)
+    ee = energy_efficiency(design, speedup)
+    assert ee == pytest.approx(PAPER_ENERGY_EFFICIENCY[opt], rel=0.02)
+
+
+def test_sweep_designs_reports():
+    reports = sweep_designs(TABLE_I["DLRM-2"])
+    assert set(reports) == set(DESIGNS)
+    base = reports["BASE"]
+    assert base.macs == TABLE_I["DLRM-2"].macs
+    for rep in reports.values():
+        assert rep.cycles > 0 and 0 < rep.utilization <= 1
+    # utilization of the best design should be several x the baseline's
+    assert (reports["RASA-DMDB-WLS"].utilization
+            > 3 * reports["BASE"].utilization)

@@ -1,0 +1,65 @@
+"""Fused SSD chunk kernel vs the model's chunked-scan oracle
+(shape/chunk sweeps, interpret mode)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ssd_chunk_fused, hbm_bytes_fused
+from repro.models.ssm import ssd_chunked
+
+
+def _oracle(x, dt, a, b, c, chunk):
+    bh = x.shape[0]
+    ys, fins = [], []
+    for i in range(bh):
+        yi, fi = ssd_chunked(x[i:i + 1, :, None, :], dt[i:i + 1, :, None],
+                             a[i:i + 1], b[i:i + 1, :, None, :],
+                             c[i:i + 1, :, None, :], chunk=chunk)
+        ys.append(np.asarray(yi)[0, :, 0])
+        fins.append(np.asarray(fi)[0, 0].T)      # -> [n, p]
+    return np.stack(ys), np.stack(fins)
+
+
+@pytest.mark.parametrize("shape", [(2, 64, 8, 8), (3, 128, 16, 8),
+                                   (1, 256, 32, 16)])
+@pytest.mark.parametrize("chunk", [16, 32])
+def test_fused_matches_oracle(shape, chunk):
+    bh, s, p, n = shape
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    x = jnp.asarray(rng.normal(size=(bh, s, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(bh, s)), jnp.float32)
+    a = jnp.asarray(-rng.uniform(0.5, 2.0, size=(bh,)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(bh, s, n)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(bh, s, n)), jnp.float32)
+    y, fin = ssd_chunk_fused(x, dt, a, b, c, chunk=chunk, interpret=True)
+    want_y, want_fin = _oracle(x, dt, a, b, c, chunk)
+    np.testing.assert_allclose(np.asarray(y), want_y, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(fin), want_fin, rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_fused_bf16():
+    rng = np.random.default_rng(0)
+    bh, s, p, n = 2, 64, 16, 8
+    x = jnp.asarray(rng.normal(size=(bh, s, p)), jnp.bfloat16)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(bh, s)), jnp.float32)
+    a = jnp.asarray(-rng.uniform(0.5, 2.0, size=(bh,)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(bh, s, n)), jnp.bfloat16)
+    c = jnp.asarray(rng.normal(size=(bh, s, n)), jnp.bfloat16)
+    y, fin = ssd_chunk_fused(x, dt, a, b, c, chunk=32, interpret=True)
+    want_y, want_fin = _oracle(x.astype(jnp.float32), dt, a,
+                               b.astype(jnp.float32),
+                               c.astype(jnp.float32), 32)
+    rel = np.abs(np.asarray(y, np.float32) - want_y).max() / np.abs(want_y).max()
+    assert rel < 3e-2
+
+
+def test_cost_model_napkin():
+    """The B1.3 napkin: fused traffic for one zamba2 layer-pass is ~1 GB
+    vs the measured multi-TB unfused accounting."""
+    # zamba2: d_inner=5120, heads=80, p=64, n=64; per-device b=16
+    bytes_per_layer = hbm_bytes_fused(bh=16 * 80, s=4096, p=64, n=64)
+    assert bytes_per_layer < 3 * 2**30      # ~2.7 GB streamed operands
+    # vs the unfused XLA accounting for the same layer: ~1.2 TB/unit-layer
+    # (EXPERIMENTS.md B1.3) -> the kernel removes >99% of the bound

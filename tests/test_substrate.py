@@ -1,0 +1,177 @@
+"""Substrate tests: optimizer, checkpointing (atomic/async/resharding),
+data determinism, gradient compression, schedules."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, latest_step,
+                              restore_checkpoint, save_checkpoint)
+from repro.data import SyntheticLMDataset
+from repro.configs import get_config
+from repro.optim import (adamw_init, adamw_update, compress_int8,
+                         decompress_int8, linear_warmup_cosine)
+
+
+# ------------------------------------------------------------------- adamw
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    opt = adamw_init(params)
+    for _ in range(300):
+        grads = jax.tree.map(lambda w: 2 * w, params)
+        params, opt, _ = adamw_update(params, grads, opt, lr=0.1,
+                                      weight_decay=0.0)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_adamw_grad_clip():
+    params = {"w": jnp.zeros(4)}
+    opt = adamw_init(params)
+    huge = {"w": jnp.full(4, 1e9)}
+    _, _, metrics = adamw_update(params, huge, opt, lr=0.1, grad_clip=1.0)
+    assert metrics["grad_norm"] > 1e8      # reported pre-clip
+
+
+def test_adamw_bf16_moments():
+    params = {"w": jnp.ones(8, jnp.bfloat16)}
+    opt = adamw_init(params, dtype="bfloat16")
+    assert opt.m["w"].dtype == jnp.bfloat16
+    g = {"w": jnp.ones(8, jnp.bfloat16)}
+    p2, opt2, _ = adamw_update(params, g, opt, lr=1e-2)
+    assert p2["w"].dtype == jnp.bfloat16
+    assert opt2.v["w"].dtype == jnp.bfloat16
+
+
+def test_schedule():
+    lr0 = linear_warmup_cosine(0, peak_lr=1.0, warmup_steps=10, total_steps=100)
+    lr10 = linear_warmup_cosine(10, peak_lr=1.0, warmup_steps=10, total_steps=100)
+    lr100 = linear_warmup_cosine(100, peak_lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(lr0) == 0.0
+    assert float(lr10) == pytest.approx(1.0)
+    assert float(lr100) == pytest.approx(0.1, abs=1e-3)
+
+
+# -------------------------------------------------------------- checkpoints
+def _state(seed=0):
+    k = jax.random.key(seed)
+    return {"params": {"w": jax.random.normal(k, (8, 8)),
+                       "b": jnp.zeros(8, jnp.bfloat16)},
+            "step": jnp.asarray(7, jnp.int32)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    state = _state()
+    save_checkpoint(tmp_path, 7, state)
+    restored, step = restore_checkpoint(tmp_path, jax.tree.map(jnp.zeros_like, state))
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_checkpoint_atomicity(tmp_path, monkeypatch):
+    """A crash mid-save must not clobber the previous checkpoint."""
+    state = _state()
+    save_checkpoint(tmp_path, 1, state)
+
+    import repro.checkpoint.store as store
+    real_savez = np.savez
+
+    def boom(*a, **kw):
+        raise IOError("disk full")
+    monkeypatch.setattr(np, "savez", boom)
+    with pytest.raises(IOError):
+        save_checkpoint(tmp_path, 2, _state(1))
+    monkeypatch.setattr(np, "savez", real_savez)
+
+    assert latest_step(tmp_path) == 1
+    restored, step = restore_checkpoint(tmp_path, jax.tree.map(jnp.zeros_like, state))
+    assert step == 1
+    # no stray tmp dirs
+    assert not [p for p in os.listdir(tmp_path) if p.startswith(".tmp")]
+
+
+def test_checkpoint_corruption_detected(tmp_path):
+    state = _state()
+    d = save_checkpoint(tmp_path, 3, state)
+    # flip bytes in the arrays file
+    f = d / "arrays.npz"
+    raw = bytearray(f.read_bytes())
+    raw[len(raw) // 2] ^= 0xFF
+    f.write_bytes(bytes(raw))
+    with pytest.raises(Exception):
+        restore_checkpoint(tmp_path, jax.tree.map(jnp.zeros_like, state))
+
+
+def test_checkpoint_manager_async_and_retention(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save_async(s, _state(s))
+    mgr.wait()
+    steps = sorted(int(p.name.split("_")[1]) for p in tmp_path.iterdir())
+    assert steps == [3, 4]
+
+
+# --------------------------------------------------------------------- data
+def test_data_deterministic_and_step_indexed():
+    cfg = get_config("qwen3-1.7b", smoke=True).model
+    d1 = SyntheticLMDataset(cfg, seq_len=16, global_batch=4, seed=3)
+    d2 = SyntheticLMDataset(cfg, seq_len=16, global_batch=4, seed=3)
+    b1 = d1.batch(42)
+    b2 = d2.batch(42)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = d1.batch(43)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+
+
+def test_data_host_sharding_partitions_global_batch():
+    cfg = get_config("qwen3-1.7b", smoke=True).model
+    hosts = [SyntheticLMDataset(cfg, seq_len=8, global_batch=8, seed=0,
+                                n_hosts=4, host_id=i) for i in range(4)]
+    batches = [h.batch(0)["tokens"] for h in hosts]
+    assert all(b.shape[0] == 2 for b in batches)
+    # different hosts see different data
+    assert not np.array_equal(batches[0], batches[1])
+
+
+def test_data_tokens_in_vocab():
+    cfg = get_config("gemma-2b", smoke=True).model
+    d = SyntheticLMDataset(cfg, seq_len=64, global_batch=2)
+    t = d.batch(0)["tokens"]
+    assert t.min() >= 0 and t.max() < cfg.vocab
+
+
+# -------------------------------------------------------------- compression
+def test_int8_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(128,)), jnp.float32)
+    q, s = compress_int8(x)
+    err = np.abs(np.asarray(decompress_int8(q, s) - x))
+    assert err.max() <= float(s) / 2 + 1e-6
+
+
+def test_error_feedback_unbiased_over_time():
+    """With error feedback, the *accumulated* compressed sum tracks the true
+    accumulated gradient (residual stays bounded)."""
+    rng = np.random.default_rng(1)
+    residual = jnp.zeros(64)
+    true_acc = np.zeros(64)
+    comp_acc = np.zeros(64)
+    for step in range(50):
+        g = jnp.asarray(rng.normal(size=(64,)), jnp.float32) * 0.1
+        true_acc += np.asarray(g)
+        gf = g + residual
+        q, s = compress_int8(gf)
+        deq = decompress_int8(q, s)
+        residual = gf - deq
+        comp_acc += np.asarray(deq)
+    # accumulated difference == final residual (telescoping), hence bounded
+    np.testing.assert_allclose(true_acc - comp_acc, np.asarray(residual),
+                               atol=1e-5)
+    assert np.abs(np.asarray(residual)).max() < 0.01
