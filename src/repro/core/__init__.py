@@ -12,20 +12,21 @@
 
 from .designs import DESIGNS, EngineConfig, get_design
 from .isa import (NUM_TREGS, TILE_K, TILE_M, TILE_N, Instr, Op,
-                  TileRegisterFile, count_ops, validate_stream)
+                  TileRegisterFile, count_ops, tile_bytes, validate_stream)
 from .simulator import SimReport, normalized_runtime, simulate, sweep_designs
 from .tiling import (ALG1_POLICY, MAX_REUSE_POLICY, GemmSpec, RegPolicy,
                      lower_gemm, stream_stats)
-from .timing import PipelineSimulator, TimingResult, serial_mm_latency, steady_state_interval
+from .timing import (LoadStreamModel, PipelineSimulator, TimingResult,
+                     serial_mm_latency, steady_state_interval)
 from .workloads import TABLE_I, batch_sweep
 
 __all__ = [
     "DESIGNS", "EngineConfig", "get_design",
     "NUM_TREGS", "TILE_K", "TILE_M", "TILE_N", "Instr", "Op",
-    "TileRegisterFile", "count_ops", "validate_stream",
+    "TileRegisterFile", "count_ops", "tile_bytes", "validate_stream",
     "SimReport", "normalized_runtime", "simulate", "sweep_designs",
     "ALG1_POLICY", "MAX_REUSE_POLICY", "GemmSpec", "RegPolicy",
     "lower_gemm", "stream_stats",
-    "PipelineSimulator", "TimingResult", "serial_mm_latency",
-    "steady_state_interval", "TABLE_I", "batch_sweep",
+    "LoadStreamModel", "PipelineSimulator", "TimingResult",
+    "serial_mm_latency", "steady_state_interval", "TABLE_I", "batch_sweep",
 ]

@@ -81,3 +81,16 @@ def reference_gemm(a: np.ndarray, b: np.ndarray, c: np.ndarray) -> np.ndarray:
     a16 = np.asarray(a, dtype=BF16).astype(np.float32)
     b16 = np.asarray(b, dtype=BF16).astype(np.float32)
     return np.asarray(c, np.float32) + a16 @ b16
+
+
+def simulate_chip(workload, chip=None, **kwargs):
+    """Chip-level (multi-core) simulation entry point.
+
+    Convenience re-export: delegates to :func:`repro.multicore.simulate_chip`
+    (imported lazily so ``repro.core`` stays dependency-free of the chip
+    layer).  ``workload`` is a single :class:`~repro.core.tiling.GemmSpec`
+    (partitioned across cores) or a sequence of them (scheduled across
+    cores); see :mod:`repro.multicore` for the knobs.
+    """
+    from ..multicore import simulate_chip as _simulate_chip
+    return _simulate_chip(workload, chip, **kwargs)

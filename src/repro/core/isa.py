@@ -77,6 +77,19 @@ class Instr:
         return f"rasa_mm  treg{self.dst}, treg{self.src1}, treg{self.src2}"
 
 
+def tile_bytes(ins: Instr) -> int:
+    """Memory traffic of one tile access: bf16 A/B operands, fp32 C tiles.
+
+    Used by bandwidth-aware load models (``addr[0]`` names the matrix).
+    """
+    mat = ins.addr[0] if ins.addr else "C"
+    if mat == "A":
+        return ins.tm * ins.tk * 2
+    if mat == "B":
+        return ins.tk * ins.tn * 2
+    return ins.tm * ins.tn * 4
+
+
 @dataclasses.dataclass
 class TregState:
     """Architectural state of one tile register as seen by the scheduler."""

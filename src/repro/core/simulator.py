@@ -13,7 +13,7 @@ import dataclasses
 import functools
 
 from .designs import DESIGNS, EngineConfig, get_design
-from .timing import PipelineSimulator, TimingResult
+from .timing import LoadStreamModel, PipelineSimulator, TimingResult
 from .tiling import ALG1_POLICY, GemmSpec, RegPolicy, lower_gemm
 
 
@@ -29,6 +29,8 @@ class SimReport:
     utilization: float
     runtime_s: float
     macs: int
+    #: see TimingResult.load_stall_cycles -- arbiter delay, not end-to-end.
+    load_stall_cycles: float = 0.0
 
     @property
     def macs_per_cycle(self) -> float:
@@ -36,9 +38,10 @@ class SimReport:
 
 
 def simulate(spec: GemmSpec, design: str | EngineConfig,
-             policy: RegPolicy = ALG1_POLICY) -> SimReport:
+             policy: RegPolicy = ALG1_POLICY,
+             load_model: LoadStreamModel | None = None) -> SimReport:
     cfg = get_design(design) if isinstance(design, str) else design
-    sim = PipelineSimulator(cfg)
+    sim = PipelineSimulator(cfg, load_model=load_model)
     res: TimingResult = sim.run(list(lower_gemm(spec, policy)))
     return SimReport(
         design=cfg.name,
@@ -49,6 +52,7 @@ def simulate(spec: GemmSpec, design: str | EngineConfig,
         utilization=res.utilization,
         runtime_s=res.cycles / cfg.engine_clock_hz,
         macs=spec.macs,
+        load_stall_cycles=res.load_stall_cycles,
     )
 
 

@@ -33,7 +33,37 @@ import dataclasses
 from typing import Sequence
 
 from .designs import EngineConfig
-from .isa import Instr, Op, TileRegisterFile
+from .isa import Instr, Op, TileRegisterFile, tile_bytes
+
+
+class LoadStreamModel:
+    """Reusable stream-timing hook: arbitrates tile-load issue slots.
+
+    The default model reproduces the paper's idealized LSQ -- ``load_ports``
+    tile loads sustained per engine cycle, never bandwidth-limited ("the
+    memory system never throttles throughput").  Subclasses may impose an
+    aggregate bandwidth budget (see :mod:`repro.multicore`); the simulator
+    calls :meth:`acquire` once per ``rasa_tl`` in issue order and
+    :meth:`reset` at the start of every :meth:`PipelineSimulator.run`.
+    """
+
+    def __init__(self, load_ports: int):
+        self.load_ports = load_ports
+        self.reset()
+
+    def reset(self) -> None:
+        self._next_free = 0.0
+
+    def acquire(self, t_request: float, n_bytes: int) -> tuple[float, float]:
+        """Claim a load slot for ``n_bytes`` requested at ``t_request``.
+
+        Returns ``(t_start, bw_stall)``: when the load actually starts and
+        how many cycles of that wait are attributable to bandwidth throttling
+        (always 0 for the unthrottled port model).
+        """
+        start = max(t_request, self._next_free)
+        self._next_free = start + 1.0 / self.load_ports
+        return start, 0.0
 
 
 @dataclasses.dataclass
@@ -56,6 +86,12 @@ class TimingResult:
     wl_skips: int                      # WLBP hits
     useful_macs: float                 # sum(tm*tk*tn) over mm instructions
     peak_macs_per_cycle: int
+    #: cumulative load-start delay imposed by the bandwidth arbiter.  This
+    #: counts delays the pipeline may absorb (loads run far ahead of their
+    #: consumers); the end-to-end cost of contention is
+    #: ``ChipReport.bw_stall_cycles`` in :mod:`repro.multicore`.  Zero here
+    #: guarantees the run is identical to an unthrottled one.
+    load_stall_cycles: float = 0.0
     schedules: list[MMSchedule] | None = None
 
     @property
@@ -65,17 +101,20 @@ class TimingResult:
             return 0.0
         return self.useful_macs / (self.cycles * self.peak_macs_per_cycle)
 
-    @property
-    def runtime_s(self) -> float:
-        return self.cycles  # scaled by clock in callers that need seconds
+    def runtime_seconds(self, clock_hz: float) -> float:
+        """Wall time at the given engine clock (cycles are clock-agnostic)."""
+        return self.cycles / clock_hz
 
 
 class PipelineSimulator:
     """In-order issue, cycle-level sub-stage pipeline simulator."""
 
-    def __init__(self, config: EngineConfig, keep_schedules: bool = False):
+    def __init__(self, config: EngineConfig, keep_schedules: bool = False,
+                 load_model: LoadStreamModel | None = None):
         self.cfg = config
         self.keep_schedules = keep_schedules
+        #: stream-timing hook for tile loads; reset at the start of each run.
+        self.load_model = load_model or LoadStreamModel(config.load_ports)
 
     def run(self, stream: Sequence[Instr]) -> TimingResult:
         cfg = self.cfg
@@ -85,7 +124,8 @@ class PipelineSimulator:
         # core->engine issue bandwidth: instructions issued per engine cycle.
         issue_per_cycle = cfg.core_issue_width * (cfg.core_clock_hz / cfg.engine_clock_hz)
         load_lat = float(cfg.load_latency)
-        load_ports = cfg.load_ports
+        load_model = self.load_model
+        load_model.reset()
 
         regfile = TileRegisterFile()
         reg_ready = [0.0] * len(regfile.regs)
@@ -100,10 +140,10 @@ class PipelineSimulator:
         # serialized on it (monotonic), independent of WLBP skips in between.
         wl_port_free = 0.0
 
-        next_load_slot = 0.0           # load-port availability (ports/cycle)
         t_end = 0.0
         n_mm = n_tl = n_ts = wl_skips = 0
         useful = 0.0
+        bw_stall = 0.0
         schedules: list[MMSchedule] = [] if self.keep_schedules else None  # type: ignore
 
         for idx, ins in enumerate(stream):
@@ -111,8 +151,8 @@ class PipelineSimulator:
 
             if ins.op is Op.TL:
                 n_tl += 1
-                start = max(t_issue, next_load_slot)
-                next_load_slot = start + 1.0 / load_ports
+                start, stall = load_model.acquire(t_issue, tile_bytes(ins))
+                bw_stall += stall
                 done = start + load_lat
                 regfile.write(ins.dst, ins.addr)       # type: ignore[arg-type]
                 reg_ready[ins.dst] = done              # type: ignore[index]
@@ -174,9 +214,6 @@ class PipelineSimulator:
             reg_ready[c] = dr_end                      # type: ignore[index]
             # writing C does not disturb the latched weights; re-mark B latched
             regfile.latch_weights(b)                   # type: ignore[arg-type]
-            if reuse:
-                # keep generation bookkeeping consistent: latch unchanged
-                pass
 
             useful += ins.tm * ins.tk * ins.tn
             t_end = max(t_end, dr_end)
@@ -196,6 +233,7 @@ class PipelineSimulator:
             wl_skips=wl_skips,
             useful_macs=useful,
             peak_macs_per_cycle=cfg.peak_macs_per_cycle,
+            load_stall_cycles=bw_stall,
             schedules=schedules,
         )
 
@@ -211,7 +249,13 @@ def steady_state_interval(cfg: EngineConfig, tm: int, weight_reused: bool) -> fl
     if cfg.wlbp and weight_reused:
         return tm
     if cfg.wls:
-        return tm
+        # the shadow buffer hides WL behind compute, but the single weight
+        # insertion network still serializes *fresh* weight sets: one WL
+        # (`rows` cycles) per rasa_mm floors the interval.
+        return max(tm, cfg.wl_cycles)
     if cfg.pipe:
-        return cfg.wl_cycles + tm + cfg.fs_cycles
+        # WL overlaps the previous DR, but FF still waits for both this WL
+        # and the previous drain: whichever is longer paces the pipeline
+        # (DR > WL only with DM's +1 merge-row cycle).
+        return max(cfg.wl_cycles, cfg.dr_cycles) + tm + cfg.fs_cycles
     return cfg.serial_latency(tm)

@@ -1,0 +1,14 @@
+"""jax version-compat shims shared by the Pallas kernels."""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax < 0.5 exposes the TPU compiler params as TPUCompilerParams; newer
+# releases renamed it to CompilerParams.
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+if _CompilerParams is None:  # pragma: no cover - depends on jax version
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; this jax version is unsupported (need >=0.4.35)")

@@ -12,12 +12,21 @@ import jax
 from ..config import ParallelConfig
 
 
+def _auto_mesh(shape, axes):
+    """jax.make_mesh with Auto axis types; older jax (< 0.6, no
+    jax.sharding.AxisType) builds auto-sharded meshes unconditionally."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; (2, 16, 16) = 512 chips across two pods."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _auto_mesh(shape, axes)
 
 
 def make_mesh_for(parallel: ParallelConfig):
@@ -29,8 +38,7 @@ def make_mesh_for(parallel: ParallelConfig):
     else:
         shape = (parallel.data, parallel.model)
         axes = ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _auto_mesh(shape, axes)
 
 
 def make_host_mesh(max_devices: int | None = None):
@@ -43,8 +51,7 @@ def make_host_mesh(max_devices: int | None = None):
         if n % m == 0 and n >= m:
             model = m
             break
-    return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _auto_mesh((n // model, model), ("data", "model"))
 
 
 #: XLA flags a real TPU launch would set for compute/comm overlap (no-ops on

@@ -1,0 +1,53 @@
+"""Multi-core RASA CMP: contention-aware chip-level simulation.
+
+The paper evaluates one RASA engine in one CPU core; this subsystem composes
+``n_cores`` per-core :class:`~repro.core.timing.PipelineSimulator` instances
+into a chip model and answers the next question up the stack: how does a
+RASA CMP behave on a model's worth of GEMMs under shared-memory bandwidth
+contention?
+
+Layers
+------
+:mod:`~repro.multicore.chip`
+    ``ChipConfig`` (cores x design x bandwidth budget), the
+    ``SharedBandwidthLoadModel`` leaky-bucket arbiter plugged into each
+    core's load port, ``CoreCluster`` (runs one stream per core), and
+    ``ChipReport`` aggregates (makespan, per-core utilization, bandwidth
+    stalls, WLBP hit rate, speedup/efficiency vs. one core).
+:mod:`~repro.multicore.partition`
+    Intra-GEMM parallelism: M-split / N-split / 2D block-cyclic sharding of
+    one ``GemmSpec`` into per-core sub-GEMMs (output-space only; K is never
+    split, so no cross-core reduction).
+:mod:`~repro.multicore.scheduler`
+    Inter-GEMM parallelism: static round-robin and dynamic work-queue /
+    LPT placement of layer-level GEMM workloads, one GEMM per core at a
+    time.
+
+Modelling assumptions (see ``docs/multicore.md`` for details)
+-------------------------------------------------------------
+* Cores are homogeneous and private resources (register file, issue port,
+  weight-insertion network) are per-core; only tile-load bandwidth is shared.
+* Contention is static equal-share: active cores each get
+  ``bw_bytes_per_cycle / n_active``; bursts up to ``bw_burst_bytes`` pass at
+  full LSQ rate.  There is no cycle-by-cycle cross-core arbitration.
+* ``rasa_ts`` stores and instruction fetch are not counted against the
+  budget (loads dominate: every B panel is re-streamed per C block).
+* At ``n_cores=1`` the full budget exceeds one engine's demand by design,
+  so the chip model reduces exactly to the single-core simulator.
+
+Entry point: :func:`simulate_chip` -- pass one ``GemmSpec`` (partitioned) or
+a list of them (scheduled).
+"""
+
+from .chip import (ChipConfig, ChipReport, CoreCluster,
+                   SharedBandwidthLoadModel, partitioned_chip_report,
+                   simulate_chip)
+from .partition import PARTITIONERS, partition_gemm
+from .scheduler import SCHEDULERS, assign, scheduled_chip_report
+
+__all__ = [
+    "ChipConfig", "ChipReport", "CoreCluster", "SharedBandwidthLoadModel",
+    "partitioned_chip_report", "simulate_chip",
+    "PARTITIONERS", "partition_gemm",
+    "SCHEDULERS", "assign", "scheduled_chip_report",
+]

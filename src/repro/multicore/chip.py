@@ -1,0 +1,244 @@
+"""Chip-level composition: N per-core engines + a shared-memory model.
+
+A ``ChipConfig`` instantiates any :data:`repro.core.designs.DESIGNS` engine
+in every core and throttles the cores' aggregate tile-load traffic against a
+global bytes/cycle budget.  Contention is modelled statically: each *active*
+core (one with instructions to run) gets an equal ``bw_bytes_per_cycle /
+n_active`` share enforced by a leaky-bucket :class:`SharedBandwidthLoadModel`
+-- bursts up to ``bw_burst_bytes`` ride the core's LSQ at full port rate, but
+the sustained byte rate cannot exceed the share, and the excess wait is
+accounted as bandwidth-stall cycles.  See ``docs/multicore.md`` for the
+assumptions and their rationale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Sequence
+
+from ..core.designs import EngineConfig, get_design
+from ..core.isa import Instr
+from ..core.tiling import ALG1_POLICY, GemmSpec, RegPolicy, lower_gemm
+from ..core.timing import LoadStreamModel, PipelineSimulator, TimingResult
+from .partition import partition_gemm
+
+
+class SharedBandwidthLoadModel(LoadStreamModel):
+    """Leaky-bucket arbiter: per-core load ports + a bytes/cycle budget.
+
+    A load of ``n_bytes`` requested at ``t`` may start once (i) a load port
+    slot is free (``load_ports`` per cycle, as in the unthrottled model) and
+    (ii) cumulative bytes fit under ``share * t + burst``.  Any extra wait
+    imposed by (ii) is reported as bandwidth stall.  With ``share == inf``
+    this reduces exactly to the base port model.
+    """
+
+    def __init__(self, load_ports: int, bytes_per_cycle: float,
+                 burst_bytes: float = 16384.0):
+        self.bytes_per_cycle = bytes_per_cycle
+        self.burst_bytes = burst_bytes
+        super().__init__(load_ports)
+
+    def reset(self) -> None:
+        super().reset()
+        self._bytes = 0.0
+
+    def acquire(self, t_request: float, n_bytes: int) -> tuple[float, float]:
+        port_start = max(t_request, self._next_free)
+        if math.isinf(self.bytes_per_cycle):
+            t_bw = 0.0
+        else:
+            t_bw = (self._bytes + n_bytes - self.burst_bytes) / self.bytes_per_cycle
+        start = max(port_start, t_bw)
+        self._bytes += n_bytes
+        self._next_free = start + 1.0 / self.load_ports
+        return start, start - port_start
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipConfig:
+    """A CMP of ``n_cores`` identical RASA-equipped cores.
+
+    ``bw_bytes_per_cycle`` is the chip-wide tile-load budget in bytes per
+    *engine* cycle; the default 256 B/cyc corresponds to 128 GB/s at the
+    paper's 500 MHz engine clock -- ample for one core (so ``n_cores=1``
+    reduces exactly to the single-core simulator) but binding for several
+    aggressive engines.  Use ``math.inf`` for a contention-free chip.
+    """
+
+    n_cores: int = 4
+    design: str = "RASA-DMDB-WLS"
+    bw_bytes_per_cycle: float = 256.0
+    bw_burst_bytes: float = 16384.0
+    policy: RegPolicy = ALG1_POLICY
+
+    def __post_init__(self):
+        if self.n_cores < 1:
+            raise ValueError("need at least one core")
+        if not self.bw_bytes_per_cycle > 0:
+            raise ValueError("bw_bytes_per_cycle must be > 0 (use math.inf "
+                             "for a contention-free chip)")
+        if self.bw_burst_bytes < 0:
+            raise ValueError("bw_burst_bytes must be >= 0")
+
+    @property
+    def engine(self) -> EngineConfig:
+        return get_design(self.design)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipReport:
+    """Chip-level aggregate of one multi-core run (cf. core.SimReport)."""
+
+    design: str
+    workload: str
+    strategy: str                       # partitioner or scheduler used
+    n_cores: int
+    cycles: float                       # makespan: max over per-core cycles
+    single_core_cycles: float           # same work, one core, full bandwidth
+    per_core_cycles: tuple[float, ...]
+    per_core_utilization: tuple[float, ...]
+    utilization: float                  # chip-wide incl. idle cores/tails
+    #: cycles added by bandwidth contention, summed over cores: each core's
+    #: throttled runtime minus the same stream run with infinite bandwidth.
+    bw_stall_cycles: float
+    n_mm: int
+    wl_skips: int
+    macs: int
+    per_core_gemms: tuple[tuple[str, ...], ...] = ()
+
+    @property
+    def speedup(self) -> float:
+        return self.single_core_cycles / self.cycles if self.cycles else 0.0
+
+    @property
+    def efficiency(self) -> float:
+        """Parallel efficiency vs. the single-core run (1.0 = linear)."""
+        return self.speedup / self.n_cores
+
+    @property
+    def bw_stall_share(self) -> float:
+        """Share of aggregate core-cycles lost waiting on shared bandwidth."""
+        busy = sum(self.per_core_cycles)
+        return self.bw_stall_cycles / busy if busy else 0.0
+
+    @property
+    def wlbp_rate(self) -> float:
+        return self.wl_skips / self.n_mm if self.n_mm else 0.0
+
+
+class CoreCluster:
+    """Runs one instruction stream per core under the shared-memory model."""
+
+    def __init__(self, chip: ChipConfig):
+        self.chip = chip
+
+    def run_streams(self, streams: Sequence[Sequence[Instr]]
+                    ) -> tuple[list[TimingResult], list[float]]:
+        """Simulate every core's stream under its bandwidth share.
+
+        Returns ``(results, contention_stalls)`` where ``contention_stalls[i]``
+        is how many cycles core *i* lost to the shared-bandwidth throttle
+        (its throttled runtime minus its unthrottled runtime -- 0 whenever
+        the budget does not bind).
+        """
+        cfg = self.chip.engine
+        n_active = sum(1 for s in streams if s) or 1
+        share = self.chip.bw_bytes_per_cycle / n_active
+        results, stalls = [], []
+        for stream in streams:
+            model = SharedBandwidthLoadModel(cfg.load_ports, share,
+                                             self.chip.bw_burst_bytes)
+            res = PipelineSimulator(cfg, load_model=model).run(stream)
+            if res.load_stall_cycles == 0.0:
+                # the arbiter never delayed a load: the run is identical to
+                # an unthrottled one, so skip the reference re-simulation.
+                stall = 0.0
+            else:
+                free = PipelineSimulator(cfg).run(stream)
+                stall = max(0.0, res.cycles - free.cycles)
+            results.append(res)
+            stalls.append(stall)
+        return results, stalls
+
+
+def _lower_many(specs: Sequence[GemmSpec], policy: RegPolicy) -> list[Instr]:
+    stream: list[Instr] = []
+    for spec in specs:
+        stream.extend(lower_gemm(spec, policy))
+    return stream
+
+
+def _aggregate(chip: ChipConfig, workload_name: str, strategy: str,
+               shards: Sequence[Sequence[GemmSpec]],
+               results: Sequence[TimingResult], stalls: Sequence[float],
+               single_core_cycles: float) -> ChipReport:
+    cycles = max((r.cycles for r in results), default=0.0)
+    peak = chip.engine.peak_macs_per_cycle
+    chip_util = (sum(r.useful_macs for r in results)
+                 / (cycles * peak * chip.n_cores)) if cycles else 0.0
+    return ChipReport(
+        design=chip.engine.name,
+        workload=workload_name,
+        strategy=strategy,
+        n_cores=chip.n_cores,
+        cycles=cycles,
+        single_core_cycles=single_core_cycles,
+        per_core_cycles=tuple(r.cycles for r in results),
+        per_core_utilization=tuple(r.utilization for r in results),
+        utilization=chip_util,
+        bw_stall_cycles=sum(stalls),
+        n_mm=sum(r.n_mm for r in results),
+        wl_skips=sum(r.wl_skips for r in results),
+        macs=sum(int(s.macs) for shard in shards for s in shard),
+        per_core_gemms=tuple(tuple(s.name for s in shard) for shard in shards),
+    )
+
+
+@functools.lru_cache(maxsize=1024)
+def _single_core_cycles_cached(chip: ChipConfig,
+                               specs: tuple[GemmSpec, ...]) -> float:
+    cfg = chip.engine
+    model = SharedBandwidthLoadModel(cfg.load_ports, chip.bw_bytes_per_cycle,
+                                     chip.bw_burst_bytes)
+    sim = PipelineSimulator(cfg, load_model=model)
+    return sim.run(_lower_many(specs, chip.policy)).cycles
+
+
+def _single_core_cycles(chip: ChipConfig, specs: Sequence[GemmSpec]) -> float:
+    """Reference: all work on one core with the full bandwidth budget."""
+    return _single_core_cycles_cached(dataclasses.replace(chip, n_cores=1),
+                                      tuple(specs))
+
+
+def partitioned_chip_report(spec: GemmSpec, chip: ChipConfig,
+                            strategy: str = "m_split") -> ChipReport:
+    """Shard one GEMM across the chip's cores and report scaling."""
+    shards = partition_gemm(spec, chip.n_cores, strategy)
+    streams = [_lower_many(shard, chip.policy) for shard in shards]
+    results, stalls = CoreCluster(chip).run_streams(streams)
+    return _aggregate(chip, spec.name, strategy, shards, results, stalls,
+                      _single_core_cycles(chip, [spec]))
+
+
+def simulate_chip(workload, chip: ChipConfig | None = None, *,
+                  partition: str = "m_split",
+                  scheduler: str = "work_queue", **chip_kwargs) -> ChipReport:
+    """Chip-level analogue of :func:`repro.core.simulate`.
+
+    ``workload`` is either one :class:`GemmSpec` -- partitioned across cores
+    with ``partition`` -- or a sequence of specs, scheduled whole-GEMM-per-
+    core with ``scheduler`` (see :mod:`repro.multicore.scheduler`).  Extra
+    keyword arguments construct the :class:`ChipConfig` when none is given.
+    """
+    if chip is None:
+        chip = ChipConfig(**chip_kwargs)
+    elif chip_kwargs:
+        raise TypeError(f"pass either a ChipConfig or config kwargs, not "
+                        f"both: {sorted(chip_kwargs)}")
+    if isinstance(workload, GemmSpec):
+        return partitioned_chip_report(workload, chip, partition)
+    from .scheduler import scheduled_chip_report
+    return scheduled_chip_report(list(workload), chip, scheduler)

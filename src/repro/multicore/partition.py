@@ -1,0 +1,97 @@
+"""GEMM partitioners: shard one GemmSpec into per-core sub-GEMMs.
+
+All strategies shard the *output* (C) space only -- K is never split, so no
+cross-core reduction traffic is modelled and every core runs an independent
+``C_i += A_i @ B_i`` lowered by the unmodified register-aware tiler.  The
+unit of distribution is the hardware tile (``TILE_M`` rows x ``TILE_N``
+cols): edge tiles go to whichever core owns them, so shard dims track the
+exact row/col extents and the simulated FF stages of edge tiles stay exact.
+
+Strategies (``PARTITIONERS``):
+
+  m_split  -- contiguous blocks of tile-rows (classic batch/row parallelism;
+              every core re-streams all of B).
+  n_split  -- contiguous blocks of tile-cols (every core re-streams all of A;
+              weight-register reuse per core is unchanged).
+  block2d  -- block-cyclic over a pm x pn core grid chosen to minimize the
+              per-core tile count; core (i, j) owns tile-rows i, i+pm, ...
+              and tile-cols j, j+pn, ...  The cyclically gathered tiles are
+              modelled as one dense sub-GEMM per core (tile counts -- the
+              quantity the cycle model sees -- are identical).
+"""
+
+from __future__ import annotations
+
+from ..core.isa import TILE_M, TILE_N
+from ..core.tiling import GemmSpec
+
+PARTITIONERS = ("m_split", "n_split", "block2d")
+
+
+def _chunk_extents(n_items: int, full: int, tile: int, n_chunks: int) -> list[int]:
+    """Split ``n_items`` tiles (covering ``full`` rows/cols of size ``tile``)
+    into ``n_chunks`` balanced contiguous chunks; return element extents."""
+    base, extra = divmod(n_items, n_chunks)
+    extents, t0 = [], 0
+    for i in range(n_chunks):
+        t1 = t0 + base + (1 if i < extra else 0)
+        extents.append(max(0, min(t1 * tile, full) - t0 * tile))
+        t0 = t1
+    return extents
+
+
+def _cyclic_extents(n_items: int, full: int, tile: int, n_ways: int) -> list[int]:
+    """Element extents when tiles are dealt cyclically across ``n_ways``."""
+    extents = [0] * n_ways
+    for t in range(n_items):
+        extents[t % n_ways] += min(tile, full - t * tile)
+    return extents
+
+
+def _best_grid(n_cores: int, mt: int, nt: int) -> tuple[int, int]:
+    """Factor ``n_cores`` into (pm, pn) minimizing the per-core tile count,
+    tie-breaking toward a square grid."""
+    best = None
+    for pm in range(1, n_cores + 1):
+        if n_cores % pm:
+            continue
+        pn = n_cores // pm
+        per_core = -(-mt // pm) * -(-nt // pn)
+        key = (per_core, abs(pm - pn))
+        if best is None or key < best[0]:
+            best = (key, (pm, pn))
+    return best[1]
+
+
+def partition_gemm(spec: GemmSpec, n_cores: int, strategy: str = "m_split",
+                   tile_m: int = TILE_M, tile_n: int = TILE_N
+                   ) -> list[list[GemmSpec]]:
+    """Shard ``spec`` across ``n_cores``; returns one shard list per core.
+
+    Cores whose share of the tile grid is empty (more cores than tiles along
+    the split axis) receive an empty list and sit idle.
+    """
+    if n_cores < 1:
+        raise ValueError("n_cores must be >= 1")
+    if strategy not in PARTITIONERS:
+        raise ValueError(f"unknown partitioner {strategy!r}; "
+                         f"available: {PARTITIONERS}")
+    mt, _, nt = spec.tiles(tile_m=tile_m, tile_n=tile_n)
+
+    if strategy == "m_split":
+        shards = [(m, spec.N) for m in _chunk_extents(mt, spec.M, tile_m, n_cores)]
+    elif strategy == "n_split":
+        shards = [(spec.M, n) for n in _chunk_extents(nt, spec.N, tile_n, n_cores)]
+    else:  # block2d
+        pm, pn = _best_grid(n_cores, mt, nt)
+        rows = _cyclic_extents(mt, spec.M, tile_m, pm)
+        cols = _cyclic_extents(nt, spec.N, tile_n, pn)
+        shards = [(rows[i], cols[j]) for i in range(pm) for j in range(pn)]
+
+    out: list[list[GemmSpec]] = []
+    for core, (m, n) in enumerate(shards):
+        if m > 0 and n > 0:
+            out.append([GemmSpec(f"{spec.name}@c{core}", M=m, K=spec.K, N=n)])
+        else:
+            out.append([])
+    return out

@@ -1,0 +1,78 @@
+"""Multi-GEMM workload scheduling across the chip's cores.
+
+One model layer = one GEMM; a workload is the list of layer GEMMs (e.g.
+``repro.core.workloads.TABLE_I`` values or the per-layer traces derived from
+``repro.configs``).  Each GEMM runs whole on a single core (layer-level
+parallelism -- intra-GEMM partitioning is :mod:`repro.multicore.partition`'s
+job); the scheduler decides the GEMM -> core placement:
+
+  round_robin -- static: GEMM ``i`` goes to core ``i % n_cores``, blind to
+                 cost.  The baseline every dynamic policy must beat.
+  work_queue  -- dynamic: GEMMs are pulled from a single queue by whichever
+                 core frees up first (deterministic work-stealing under the
+                 cost model).  Costs are estimated with the unthrottled
+                 single-engine simulator (cached), then the final placement
+                 is re-simulated under the shared-bandwidth model.
+  lpt         -- work_queue with GEMMs sorted longest-first (classic LPT
+                 bound); better balance when the workload is skewed but
+                 ignores submission order.
+"""
+
+from __future__ import annotations
+
+from ..core.simulator import _simulate_cached
+from ..core.tiling import GemmSpec
+from .chip import (ChipConfig, ChipReport, CoreCluster, _aggregate,
+                   _lower_many, _single_core_cycles)
+
+SCHEDULERS = ("round_robin", "work_queue", "lpt")
+
+
+def _estimate_cycles(spec: GemmSpec, chip: ChipConfig) -> float:
+    return _simulate_cached(spec, chip.engine.name, chip.policy).cycles
+
+
+def assign_round_robin(specs: list[GemmSpec], n_cores: int) -> list[list[GemmSpec]]:
+    out: list[list[GemmSpec]] = [[] for _ in range(n_cores)]
+    for i, spec in enumerate(specs):
+        out[i % n_cores].append(spec)
+    return out
+
+
+def assign_work_queue(specs: list[GemmSpec], n_cores: int, chip: ChipConfig,
+                      longest_first: bool = False) -> list[list[GemmSpec]]:
+    order = specs
+    if longest_first:
+        order = sorted(specs, key=lambda s: -_estimate_cycles(s, chip))
+    out: list[list[GemmSpec]] = [[] for _ in range(n_cores)]
+    free_at = [0.0] * n_cores
+    for spec in order:
+        core = min(range(n_cores), key=lambda c: free_at[c])
+        out[core].append(spec)
+        free_at[core] += _estimate_cycles(spec, chip)
+    return out
+
+
+def assign(specs: list[GemmSpec], chip: ChipConfig,
+           scheduler: str = "work_queue") -> list[list[GemmSpec]]:
+    if scheduler == "round_robin":
+        return assign_round_robin(specs, chip.n_cores)
+    if scheduler == "work_queue":
+        return assign_work_queue(specs, chip.n_cores, chip)
+    if scheduler == "lpt":
+        return assign_work_queue(specs, chip.n_cores, chip, longest_first=True)
+    raise ValueError(f"unknown scheduler {scheduler!r}; available: {SCHEDULERS}")
+
+
+def scheduled_chip_report(specs: list[GemmSpec], chip: ChipConfig,
+                          scheduler: str = "work_queue") -> ChipReport:
+    """Place ``specs`` on cores, simulate each core's concatenated stream
+    under the shared-bandwidth model, and aggregate chip-level results."""
+    if not specs:
+        raise ValueError("empty workload")
+    shards = assign(specs, chip, scheduler)
+    streams = [_lower_many(shard, chip.policy) for shard in shards]
+    results, stalls = CoreCluster(chip).run_streams(streams)
+    name = f"{specs[0].name}+{len(specs) - 1}" if len(specs) > 1 else specs[0].name
+    return _aggregate(chip, name, scheduler, shards, results, stalls,
+                      _single_core_cycles(chip, specs))

@@ -72,8 +72,8 @@ MULTIDEV_SNIPPET = textwrap.dedent("""
     import sys
     sys.path.insert(0, "src")
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import _auto_mesh
+    mesh = _auto_mesh((4, 2), ("data", "model"))
 
     # ---- sequence-parallel flash decode == reference ----
     from repro.serving.sp_decode import sp_flash_decode

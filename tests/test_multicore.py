@@ -1,0 +1,157 @@
+"""Multi-core chip model tests: partition coverage, single-core reduction,
+scaling monotonicity, bandwidth contention, and workload scheduling."""
+
+import dataclasses
+import math
+
+import pytest
+
+from repro.core import DESIGNS, GemmSpec, TABLE_I, simulate
+from repro.core.engine import simulate_chip as core_simulate_chip
+from repro.multicore import (ChipConfig, SharedBandwidthLoadModel,
+                             partition_gemm, simulate_chip)
+from repro.multicore.partition import PARTITIONERS, _best_grid
+from repro.multicore.scheduler import assign
+
+SMALL = GemmSpec("small", 128, 256, 256)
+ODD = GemmSpec("odd", 200, 96, 150)       # edge tiles in M and N
+
+
+# ------------------------------------------------------------- partitioners
+@pytest.mark.parametrize("strategy", PARTITIONERS)
+@pytest.mark.parametrize("spec", [SMALL, ODD], ids=lambda s: s.name)
+@pytest.mark.parametrize("n_cores", [1, 2, 3, 4, 8, 16])
+def test_partition_conserves_macs(strategy, spec, n_cores):
+    """Output-space sharding: per-core MACs must sum to the GEMM's MACs."""
+    shards = partition_gemm(spec, n_cores, strategy)
+    assert len(shards) == n_cores
+    total = sum(s.macs for shard in shards for s in shard)
+    assert total == spec.macs
+    for shard in shards:
+        for s in shard:
+            assert s.K == spec.K            # K is never split
+
+
+def test_partition_more_cores_than_tiles():
+    tiny = GemmSpec("tiny", 16, 32, 16)     # a single tile
+    shards = partition_gemm(tiny, 8, "m_split")
+    occupied = [s for s in shards if s]
+    assert len(occupied) == 1
+    assert occupied[0][0].M == 16
+
+
+def test_best_grid_prefers_square():
+    assert _best_grid(16, 64, 64) == (4, 4)
+    assert sorted(_best_grid(8, 64, 64)) == [2, 4]
+
+
+def test_partition_rejects_unknown_strategy():
+    with pytest.raises(ValueError):
+        partition_gemm(SMALL, 4, "k_split")
+
+
+# ----------------------------------------------- single-core exact reduction
+@pytest.mark.parametrize("design", ["BASE", "RASA-WLBP", "RASA-DMDB-WLS"])
+@pytest.mark.parametrize("strategy", PARTITIONERS)
+def test_n1_reduces_to_single_core_simreport(design, strategy):
+    """At n_cores=1 the chip model must reproduce the single-core simulator
+    exactly: the default budget does not bind for one engine."""
+    ref = simulate(SMALL, design)
+    rep = simulate_chip(SMALL, ChipConfig(n_cores=1, design=design),
+                        partition=strategy)
+    assert rep.cycles == ref.cycles
+    assert rep.speedup == 1.0 and rep.efficiency == 1.0
+    assert rep.bw_stall_cycles == 0.0
+    assert rep.utilization == pytest.approx(ref.utilization)
+
+
+def test_engine_reexport_delegates():
+    a = core_simulate_chip(SMALL, ChipConfig(n_cores=2))
+    b = simulate_chip(SMALL, ChipConfig(n_cores=2))
+    assert a == b
+
+
+# ------------------------------------------------------------------ scaling
+@pytest.mark.parametrize("design", ["BASE", "RASA-DMDB-WLS"])
+def test_speedup_monotone_under_infinite_bandwidth(design):
+    """With no bandwidth cap, adding cores never slows the chip down."""
+    chip = lambda n: ChipConfig(n_cores=n, design=design,
+                                bw_bytes_per_cycle=math.inf)
+    prev = -1.0
+    for n in (1, 2, 4, 8, 16):
+        rep = simulate_chip(SMALL, chip(n), partition="m_split")
+        assert rep.speedup >= prev - 1e-9, f"n={n}"
+        assert rep.efficiency <= 1.0 + 1e-9
+        prev = rep.speedup
+
+
+def test_bandwidth_binds_and_degrades_efficiency():
+    """Once the shared budget binds, efficiency drops strictly below 1 and
+    bandwidth-stall cycles appear; loosening the budget recovers speedup."""
+    tight = simulate_chip(SMALL, ChipConfig(n_cores=8, design="RASA-DMDB-WLS",
+                                            bw_bytes_per_cycle=64.0))
+    loose = simulate_chip(SMALL, ChipConfig(n_cores=8, design="RASA-DMDB-WLS",
+                                            bw_bytes_per_cycle=math.inf))
+    assert tight.bw_stall_cycles > 0.0
+    assert tight.efficiency < 1.0
+    assert tight.cycles > loose.cycles
+    assert 0.0 < tight.bw_stall_share < 1.0
+
+
+def test_shared_bandwidth_model_reduces_to_port_model():
+    """share=inf must reproduce the plain load-port arbiter exactly."""
+    model = SharedBandwidthLoadModel(2, math.inf)
+    starts = [model.acquire(t, 1024) for t in (0.0, 0.0, 0.0, 10.0)]
+    assert starts == [(0.0, 0.0), (0.5, 0.0), (1.0, 0.0), (10.0, 0.0)]
+
+
+def test_throttle_delays_and_reports_stall():
+    model = SharedBandwidthLoadModel(2, 1.0, burst_bytes=1024.0)
+    t0, s0 = model.acquire(0.0, 1024)       # rides the burst allowance
+    t1, s1 = model.acquire(0.0, 1024)       # must wait for bytes to drain
+    assert (t0, s0) == (0.0, 0.0)
+    assert t1 == pytest.approx(1024.0)
+    assert s1 == pytest.approx(1024.0 - 0.5)
+
+
+# ---------------------------------------------------------------- scheduler
+def _skewed_workload():
+    return [TABLE_I["DLRM-2"], SMALL, SMALL, SMALL, SMALL, SMALL]
+
+
+def test_work_queue_beats_round_robin_on_skew():
+    """One big GEMM + many small ones on two cores: round-robin piles small
+    GEMMs behind the big one, the dynamic queue routes them away."""
+    chip = ChipConfig(n_cores=2, design="RASA-WLBP")
+    wl = _skewed_workload()
+    static = simulate_chip(wl, chip, scheduler="round_robin")
+    dynamic = simulate_chip(wl, chip, scheduler="work_queue")
+    assert dynamic.cycles < static.cycles
+    assert static.n_mm == dynamic.n_mm      # same work either way
+
+
+@pytest.mark.parametrize("scheduler", ["round_robin", "work_queue", "lpt"])
+def test_schedulers_cover_all_gemms(scheduler):
+    chip = ChipConfig(n_cores=3, design="BASE")
+    wl = _skewed_workload()
+    shards = assign(wl, chip, scheduler)
+    names = sorted(s.name for shard in shards for s in shard)
+    assert names == sorted(s.name for s in wl)
+
+
+def test_chip_report_aggregates():
+    rep = simulate_chip(SMALL, ChipConfig(n_cores=4, design="RASA-WLBP"))
+    assert len(rep.per_core_cycles) == 4
+    assert rep.cycles == max(rep.per_core_cycles)
+    assert rep.macs == SMALL.macs
+    assert 0.0 < rep.utilization <= 1.0
+    assert 0.0 <= rep.wlbp_rate <= 1.0
+    ref = simulate(SMALL, "RASA-WLBP")
+    assert rep.n_mm == ref.n_mm
+
+
+def test_chip_config_validation():
+    with pytest.raises(ValueError):
+        ChipConfig(n_cores=0)
+    with pytest.raises(ValueError):
+        simulate_chip([], ChipConfig(n_cores=2))

@@ -18,8 +18,8 @@ SNIPPET = textwrap.dedent("""
 
     from repro.training.pipeline import pipeline_apply, split_stages
 
-    mesh = jax.make_mesh((4,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import _auto_mesh
+    mesh = _auto_mesh((4,), ("pod",))
 
     L, D, B = 8, 16, 8
     rng = np.random.default_rng(0)
