@@ -1,7 +1,9 @@
-"""Shared benchmark plumbing: CSV emission + result caching."""
+"""Shared benchmark plumbing: CSV emission + fingerprinted result caching."""
 
 from __future__ import annotations
 
+import hashlib
+import inspect
 import json
 import time
 from pathlib import Path
@@ -13,13 +15,45 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.3f},{derived}")
 
 
-def cache_json(key: str, fn, force: bool = False):
+def model_fingerprint(*sources) -> str:
+    """Content hash of the model code a benchmark's numbers depend on.
+
+    ``sources`` are modules (hashed by source file) or path strings.  Pass
+    the result as ``cache_json(..., fingerprint=...)`` so that editing the
+    simulator invalidates cached benchmark results instead of silently
+    serving stale numbers.
+    """
+    h = hashlib.sha256()
+    for src in sources:
+        path = Path(src) if isinstance(src, (str, Path)) else \
+            Path(inspect.getsourcefile(src))
+        h.update(path.name.encode())
+        h.update(path.read_bytes())
+    return h.hexdigest()[:16]
+
+
+def cache_json(key: str, fn, force: bool = False,
+               fingerprint: str | None = None):
+    """Return the cached result for ``key``, or compute and cache ``fn()``.
+
+    With ``fingerprint`` given, the cache file embeds it and a cached result
+    is served only when its fingerprint matches -- anything else (legacy
+    un-fingerprinted files included) is recomputed.  ``force=True`` always
+    recomputes.
+    """
     RESULTS.mkdir(parents=True, exist_ok=True)
     p = RESULTS / f"{key}.json"
     if p.exists() and not force:
-        return json.loads(p.read_text())
+        cached = json.loads(p.read_text())
+        wrapped = isinstance(cached, dict) and "__fingerprint__" in cached
+        if fingerprint is None:
+            return cached["data"] if wrapped else cached
+        if wrapped and cached["__fingerprint__"] == fingerprint:
+            return cached["data"]
     out = fn()
-    p.write_text(json.dumps(out, indent=2))
+    payload = out if fingerprint is None else \
+        {"__fingerprint__": fingerprint, "data": out}
+    p.write_text(json.dumps(payload, indent=2))
     return out
 
 

@@ -2,39 +2,84 @@
 
 For {1, 2, 4, 8, 16} cores x {BASE, RASA-WLBP, RASA-DMDB-WLS} x {m_split,
 block2d} this reports chip cycles, parallel efficiency vs. the single-core
-run, and the share of core-cycles lost to the shared 256 B/cycle tile-load
-budget.  The headline result: the faster the engine, the fewer cores it
-takes to hit the bandwidth wall -- BASE scales almost linearly to 16 cores
-while RASA-DMDB-WLS saturates around 4, and the 2D block-cyclic partitioner
-beats M-split at high core counts because M-split re-streams the full B
-matrix on every core.
+run, and the share of occupied core-cycles lost to the shared 256 B/cycle
+tile-traffic budget.  The headline result: the faster the engine, the fewer
+cores it takes to hit the bandwidth wall -- BASE scales almost linearly to
+16 cores while RASA-DMDB-WLS saturates around 4, and the 2D block-cyclic
+partitioner beats M-split at high core counts because M-split re-streams
+the full B matrix on every core.
 
-Also includes a scheduler comparison (static round-robin vs. dynamic
-work-queue vs. LPT) on a skewed multi-GEMM layer workload.
+Two further sections exercise the chip model's scheduling layers:
+
+* scheduler comparison (static round-robin vs. dynamic work-queue vs. LPT
+  vs. gang) on a skewed multi-GEMM layer workload -- gang may split a
+  dominant GEMM across otherwise-idle cores;
+* arbitration comparison (frozen static shares vs. epoch-based dynamic
+  shares) on the same skewed workload under a tight budget, showing how
+  much the static model over-estimates the makespan when early finishers
+  never return their bandwidth share.
+
+Results are cached in ``benchmarks/results/`` keyed by a fingerprint of the
+simulator sources: editing the model invalidates the cache.  ``--force``
+recomputes unconditionally.
 """
 
 from __future__ import annotations
 
+import argparse
 import sys
+
 sys.path.insert(0, "src")
 
+import repro.core.designs
+import repro.core.isa
+import repro.core.simulator
+import repro.core.tiling
+import repro.core.timing
+import repro.core.workloads
+import repro.multicore.chip
+import repro.multicore.partition
+import repro.multicore.scheduler
 from repro.core import TABLE_I, GemmSpec
 from repro.multicore import ChipConfig, simulate_chip
 
-from common import cache_json, emit  # type: ignore
+from common import cache_json, emit, model_fingerprint  # type: ignore
 
 SPEC = GemmSpec("BERT-1", 256, 768, 768)    # Table I BERT-1 dims
 CORES = (1, 2, 4, 8, 16)
 DESIGNS = ("BASE", "RASA-WLBP", "RASA-DMDB-WLS")
 PARTITIONERS = ("m_split", "block2d")
-#: skewed layer workload for the scheduler comparison
+SCHEDULERS = ("round_robin", "work_queue", "lpt", "gang")
+#: skewed layer workload for the scheduler/arbitration comparisons
 SCHED_WORKLOAD = [TABLE_I["DLRM-2"], TABLE_I["BERT-1"], TABLE_I["DLRM-2"],
                   TABLE_I["BERT-1"], TABLE_I["DLRM-2"], TABLE_I["DLRM-2"]]
+#: budget for the arbitration section: tight enough that four RASA-WLBP
+#: cores are bandwidth-bound and the share model choice matters.
+ARB_BW = 32.0
+
+
+def _fingerprint() -> str:
+    return model_fingerprint(
+        repro.multicore.chip, repro.multicore.partition,
+        repro.multicore.scheduler, repro.core.timing, repro.core.tiling,
+        repro.core.designs, repro.core.isa, repro.core.simulator,
+        repro.core.workloads, __file__)
+
+
+def _rle(values) -> list[list]:
+    """Run-length encode a trace: [[value, run_length], ...]."""
+    out: list[list] = []
+    for v in values:
+        if out and out[-1][0] == v:
+            out[-1][1] += 1
+        else:
+            out.append([v, 1])
+    return out
 
 
 def run(force: bool = False) -> dict:
     def compute():
-        table: dict = {"partition": {}, "scheduler": {}}
+        table: dict = {"partition": {}, "scheduler": {}, "arbitration": {}}
         for design in DESIGNS:
             for part in PARTITIONERS:
                 for n in CORES:
@@ -49,7 +94,7 @@ def run(force: bool = False) -> dict:
                         "utilization": rep.utilization,
                         "wlbp_rate": rep.wlbp_rate,
                     }
-        for sched in ("round_robin", "work_queue", "lpt"):
+        for sched in SCHEDULERS:
             rep = simulate_chip(SCHED_WORKLOAD,
                                 ChipConfig(n_cores=4, design="RASA-WLBP"),
                                 scheduler=sched)
@@ -57,12 +102,35 @@ def run(force: bool = False) -> dict:
                 "cycles": rep.cycles, "speedup": rep.speedup,
                 "per_core_gemms": [list(g) for g in rep.per_core_gemms],
             }
+        for arb in ("static", "epoch"):
+            rep = simulate_chip(
+                SCHED_WORKLOAD,
+                ChipConfig(n_cores=4, design="RASA-WLBP",
+                           bw_bytes_per_cycle=ARB_BW, arbitration=arb),
+                scheduler="lpt")
+            table["arbitration"][arb] = {
+                "cycles": rep.cycles,
+                "bw_stall_cycles": rep.bw_stall_cycles,
+                "bw_stall_share": rep.bw_stall_share,
+                "arb_rounds": rep.arb_rounds,
+                "epoch_cycles": rep.epoch_cycles,
+                "active_trace_rle": _rle(rep.active_trace),
+            }
+        sta = table["arbitration"]["static"]["cycles"]
+        dyn = table["arbitration"]["epoch"]["cycles"]
+        table["arbitration"]["static_overestimate"] = sta / dyn - 1.0
         return table
-    return cache_json("multicore_scaling", compute, force=force)
+    return cache_json("multicore_scaling", compute, force=force,
+                      fingerprint=_fingerprint())
 
 
-def main() -> None:
-    table = run()
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--force", action="store_true",
+                    help="recompute even if a fingerprint-matching cache "
+                         "file exists")
+    args = ap.parse_args(argv)
+    table = run(force=args.force)
     print(f"# {SPEC.name} ({SPEC.M}x{SPEC.K}x{SPEC.N}), 256 B/cyc shared budget")
     print(f"{'design':<16}{'partition':<10}{'cores':>6}{'cycles':>12}"
           f"{'eff':>8}{'stall':>8}")
@@ -78,11 +146,27 @@ def main() -> None:
                      f"stall={v['bw_stall_share']:.3f};"
                      f"cycles={v['cycles']:.0f}")
     print("\n# scheduler comparison (4 cores, RASA-WLBP, 6-layer workload)")
-    for sched, v in table["scheduler"].items():
+    for sched in SCHEDULERS:
+        v = table["scheduler"][sched]
         print(f"{sched:<14} makespan={v['cycles']:>12.0f} "
               f"speedup={v['speedup']:.2f}")
         emit(f"multicore_sched_{sched}", 0.0,
              f"cycles={v['cycles']:.0f};speedup={v['speedup']:.2f}")
+    print(f"\n# arbitration comparison (4 cores, RASA-WLBP, LPT, "
+          f"{ARB_BW:.0f} B/cyc budget)")
+    for arb in ("static", "epoch"):
+        v = table["arbitration"][arb]
+        extra = ""
+        if arb == "epoch":
+            extra = (f"  rounds={v['arb_rounds']}"
+                     f"  active(rle)={v['active_trace_rle']}")
+        print(f"{arb:<8} makespan={v['cycles']:>12.0f} "
+              f"stall-share={v['bw_stall_share']:.3f}{extra}")
+        emit(f"multicore_arb_{arb}", 0.0,
+             f"cycles={v['cycles']:.0f};stall={v['bw_stall_share']:.3f}")
+    over = table["arbitration"]["static_overestimate"]
+    print(f"static model over-estimates the makespan by {over:.1%} "
+          f"(bandwidth freed by early finishers is never redistributed)")
 
 
 if __name__ == "__main__":

@@ -51,7 +51,7 @@ def scheduler_comparison() -> None:
     wl = [TABLE_I["DLRM-2"], TABLE_I["BERT-1"], TABLE_I["DLRM-2"],
           TABLE_I["BERT-1"], TABLE_I["DLRM-2"], TABLE_I["DLRM-2"]]
     print("== 3. Placing a 6-layer workload on 4 cores (RASA-WLBP) ==")
-    for sched in ("round_robin", "work_queue", "lpt"):
+    for sched in ("round_robin", "work_queue", "lpt", "gang"):
         rep = simulate_chip(wl, ChipConfig(n_cores=4, design="RASA-WLBP"),
                             scheduler=sched)
         lens = "/".join(str(len(g)) for g in rep.per_core_gemms)

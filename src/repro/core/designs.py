@@ -33,6 +33,10 @@ class EngineConfig:
     load_latency: int = 5
     #: number of in-flight tile loads the LSQ sustains per engine cycle
     load_ports: int = 2
+    #: tile stores retired per engine cycle once store traffic is modelled
+    #: (the chip-level arbiter serializes ``rasa_ts`` on this; the paper's
+    #: single-core model leaves stores free -- see LoadStreamModel).
+    store_ports: int = 1
 
     def __post_init__(self):
         if self.wls and not self.double_buffer:

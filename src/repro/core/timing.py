@@ -37,22 +37,34 @@ from .isa import Instr, Op, TileRegisterFile, tile_bytes
 
 
 class LoadStreamModel:
-    """Reusable stream-timing hook: arbitrates tile-load issue slots.
+    """Reusable stream-timing hook: arbitrates tile load *and* store slots.
 
     The default model reproduces the paper's idealized LSQ -- ``load_ports``
     tile loads sustained per engine cycle, never bandwidth-limited ("the
-    memory system never throttles throughput").  Subclasses may impose an
-    aggregate bandwidth budget (see :mod:`repro.multicore`); the simulator
-    calls :meth:`acquire` once per ``rasa_tl`` in issue order and
-    :meth:`reset` at the start of every :meth:`PipelineSimulator.run`.
+    memory system never throttles throughput"), and ``rasa_ts`` stores
+    retiring for free (``store_ports=None``).  Subclasses may impose an
+    aggregate, possibly *time-varying* bandwidth budget and serialize stores
+    on dedicated ports (see :mod:`repro.multicore`); the simulator calls
+    :meth:`acquire` once per ``rasa_tl`` and :meth:`acquire_store` once per
+    ``rasa_ts``, both in issue order, and :meth:`reset` at the start of every
+    :meth:`PipelineSimulator.run`.
+
+    ``last_grant`` records the start time of the latest memory access the
+    model has granted; chip-level arbiters use it to decide until when a
+    core keeps drawing on the shared budget (its *activity* horizon).
     """
 
-    def __init__(self, load_ports: int):
+    def __init__(self, load_ports: int, store_ports: int | None = None):
         self.load_ports = load_ports
+        #: stores per cycle the store path sustains; ``None`` keeps the
+        #: paper's loads-only model where stores never serialize.
+        self.store_ports = store_ports
         self.reset()
 
     def reset(self) -> None:
         self._next_free = 0.0
+        self._store_next_free = 0.0
+        self.last_grant = 0.0
 
     def acquire(self, t_request: float, n_bytes: int) -> tuple[float, float]:
         """Claim a load slot for ``n_bytes`` requested at ``t_request``.
@@ -63,6 +75,20 @@ class LoadStreamModel:
         """
         start = max(t_request, self._next_free)
         self._next_free = start + 1.0 / self.load_ports
+        self.last_grant = max(self.last_grant, start)
+        return start, 0.0
+
+    def acquire_store(self, t_request: float, n_bytes: int) -> tuple[float, float]:
+        """Claim a store slot; same contract as :meth:`acquire`.
+
+        With ``store_ports=None`` stores are free (no serialization, no
+        bytes) -- the paper's idealized model.
+        """
+        if self.store_ports is None:
+            return t_request, 0.0
+        start = max(t_request, self._store_next_free)
+        self._store_next_free = start + 1.0 / self.store_ports
+        self.last_grant = max(self.last_grant, start)
         return start, 0.0
 
 
@@ -86,9 +112,9 @@ class TimingResult:
     wl_skips: int                      # WLBP hits
     useful_macs: float                 # sum(tm*tk*tn) over mm instructions
     peak_macs_per_cycle: int
-    #: cumulative load-start delay imposed by the bandwidth arbiter.  This
-    #: counts delays the pipeline may absorb (loads run far ahead of their
-    #: consumers); the end-to-end cost of contention is
+    #: cumulative load/store-start delay imposed by the bandwidth arbiter.
+    #: This counts delays the pipeline may absorb (loads run far ahead of
+    #: their consumers); the end-to-end cost of contention is
     #: ``ChipReport.bw_stall_cycles`` in :mod:`repro.multicore`.  Zero here
     #: guarantees the run is identical to an unthrottled one.
     load_stall_cycles: float = 0.0
@@ -161,8 +187,10 @@ class PipelineSimulator:
 
             if ins.op is Op.TS:
                 n_ts += 1
-                done = max(t_issue, reg_ready[ins.src1]) + 1.0  # type: ignore[index]
-                t_end = max(t_end, done)
+                t_avail = max(t_issue, reg_ready[ins.src1])    # type: ignore[index]
+                start, stall = load_model.acquire_store(t_avail, tile_bytes(ins))
+                bw_stall += stall
+                t_end = max(t_end, start + 1.0)
                 continue
 
             # ---- rasa_mm ---------------------------------------------------

@@ -9,29 +9,37 @@ contention?
 Layers
 ------
 :mod:`~repro.multicore.chip`
-    ``ChipConfig`` (cores x design x bandwidth budget), the
-    ``SharedBandwidthLoadModel`` leaky-bucket arbiter plugged into each
-    core's load port, ``CoreCluster`` (runs one stream per core), and
-    ``ChipReport`` aggregates (makespan, per-core utilization, bandwidth
-    stalls, WLBP hit rate, speedup/efficiency vs. one core).
+    ``ChipConfig`` (cores x design x bandwidth budget x arbitration), the
+    ``EpochBandwidthLoadModel`` epoch-sliced token-bucket arbiter (default)
+    and the ``SharedBandwidthLoadModel`` static-share baseline, both plugged
+    into each core's load/store ports, ``CoreCluster`` (runs one stream per
+    core; for epoch arbitration it relaxes the per-epoch shares to a fixed
+    point), and ``ChipReport`` aggregates (makespan, per-core utilization,
+    bandwidth stalls, per-epoch share/active traces, WLBP hit rate,
+    speedup/efficiency vs. one core).
 :mod:`~repro.multicore.partition`
     Intra-GEMM parallelism: M-split / N-split / 2D block-cyclic sharding of
     one ``GemmSpec`` into per-core sub-GEMMs (output-space only; K is never
     split, so no cross-core reduction).
 :mod:`~repro.multicore.scheduler`
     Inter-GEMM parallelism: static round-robin and dynamic work-queue /
-    LPT placement of layer-level GEMM workloads, one GEMM per core at a
-    time.
+    LPT placement of layer-level GEMM workloads, plus the ``gang``
+    scheduler that splits a dominant GEMM across soon-idle cores
+    (combined inter+intra parallelism).
 
 Modelling assumptions (see ``docs/multicore.md`` for details)
 -------------------------------------------------------------
 * Cores are homogeneous and private resources (register file, issue port,
-  weight-insertion network) are per-core; only tile-load bandwidth is shared.
-* Contention is static equal-share: active cores each get
-  ``bw_bytes_per_cycle / n_active``; bursts up to ``bw_burst_bytes`` pass at
-  full LSQ rate.  There is no cycle-by-cycle cross-core arbitration.
-* ``rasa_ts`` stores and instruction fetch are not counted against the
-  budget (loads dominate: every B panel is re-streamed per C block).
+  weight-insertion network) are per-core; tile loads *and* ``rasa_ts``
+  stores share the chip's memory bandwidth (``store_bytes_shared=False``
+  recovers the loads-only accounting).
+* Contention is arbitrated in scheduling epochs (``epoch_cycles``): each
+  epoch's equal share is recomputed over the cores still drawing on the
+  budget, so early finishers return their bandwidth.  Bursts up to
+  ``bw_burst_bytes`` pass at full LSQ rate, but unused allowance is capped
+  at the burst -- bytes granted per epoch never exceed the epoch's budget
+  (plus the burst and one in-flight tile).  ``arbitration="static"`` keeps
+  the frozen equal-share model for comparison.
 * At ``n_cores=1`` the full budget exceeds one engine's demand by design,
   so the chip model reduces exactly to the single-core simulator.
 
@@ -39,15 +47,17 @@ Entry point: :func:`simulate_chip` -- pass one ``GemmSpec`` (partitioned) or
 a list of them (scheduled).
 """
 
-from .chip import (ChipConfig, ChipReport, CoreCluster,
+from .chip import (ARBITRATIONS, ArbiterTrace, ChipConfig, ChipReport,
+                   CoreCluster, EpochBandwidthLoadModel,
                    SharedBandwidthLoadModel, partitioned_chip_report,
                    simulate_chip)
-from .partition import PARTITIONERS, partition_gemm
+from .partition import PARTITIONERS, partition_gemm, split_ways
 from .scheduler import SCHEDULERS, assign, scheduled_chip_report
 
 __all__ = [
-    "ChipConfig", "ChipReport", "CoreCluster", "SharedBandwidthLoadModel",
+    "ARBITRATIONS", "ArbiterTrace", "ChipConfig", "ChipReport", "CoreCluster",
+    "EpochBandwidthLoadModel", "SharedBandwidthLoadModel",
     "partitioned_chip_report", "simulate_chip",
-    "PARTITIONERS", "partition_gemm",
+    "PARTITIONERS", "partition_gemm", "split_ways",
     "SCHEDULERS", "assign", "scheduled_chip_report",
 ]

@@ -1,14 +1,33 @@
 """Chip-level composition: N per-core engines + a shared-memory model.
 
 A ``ChipConfig`` instantiates any :data:`repro.core.designs.DESIGNS` engine
-in every core and throttles the cores' aggregate tile-load traffic against a
-global bytes/cycle budget.  Contention is modelled statically: each *active*
-core (one with instructions to run) gets an equal ``bw_bytes_per_cycle /
-n_active`` share enforced by a leaky-bucket :class:`SharedBandwidthLoadModel`
--- bursts up to ``bw_burst_bytes`` ride the core's LSQ at full port rate, but
-the sustained byte rate cannot exceed the share, and the excess wait is
-accounted as bandwidth-stall cycles.  See ``docs/multicore.md`` for the
-assumptions and their rationale.
+in every core and throttles the cores' aggregate tile traffic against a
+global bytes/cycle budget.  Two arbitration models are available:
+
+``arbitration="epoch"`` (default)
+    Time is divided into scheduling epochs of ``epoch_cycles`` engine
+    cycles.  Within each epoch every core still drawing on the memory
+    system gets an equal ``bw_bytes_per_cycle / n_active(e)`` share; a core
+    that drains its traffic early *returns its share*, so the survivors'
+    shares grow epoch by epoch.  The per-core share schedule is found by a
+    monotone fixed-point relaxation (see :meth:`CoreCluster._run_epoch`)
+    and enforced per core by a token-bucket
+    :class:`EpochBandwidthLoadModel`.  The resulting per-epoch share/active
+    traces are reported on :class:`ChipReport`.
+
+``arbitration="static"``
+    The frozen-share model, kept as the comparison baseline: each active
+    core gets ``bw_bytes_per_cycle / n_active`` for the entire run
+    (:class:`SharedBandwidthLoadModel`, the same token bucket with a
+    constant share).  This over-penalizes long-running cores on skewed
+    workloads -- bandwidth freed by early finishers is never
+    redistributed.
+
+In both models bursts up to ``bw_burst_bytes`` ride the core's LSQ at full
+port rate, the excess wait is accounted as bandwidth-stall cycles, and --
+unless ``store_bytes_shared=False`` -- ``rasa_ts`` store traffic is charged
+against the same budget and serialized on the engine's store port.  See
+``docs/multicore.md`` for the assumptions and their rationale.
 """
 
 from __future__ import annotations
@@ -19,53 +38,192 @@ import math
 from typing import Sequence
 
 from ..core.designs import EngineConfig, get_design
-from ..core.isa import Instr
+from ..core.isa import Instr, Op
 from ..core.tiling import ALG1_POLICY, GemmSpec, RegPolicy, lower_gemm
 from ..core.timing import LoadStreamModel, PipelineSimulator, TimingResult
 from .partition import partition_gemm
 
+ARBITRATIONS = ("epoch", "static")
 
-class SharedBandwidthLoadModel(LoadStreamModel):
-    """Leaky-bucket arbiter: per-core load ports + a bytes/cycle budget.
+#: relaxation-round cap for the epoch arbiter; the monotone iteration
+#: converges in a handful of rounds, this only guards pathological streams.
+MAX_ARBITER_ROUNDS = 32
 
-    A load of ``n_bytes`` requested at ``t`` may start once (i) a load port
-    slot is free (``load_ports`` per cycle, as in the unthrottled model) and
-    (ii) cumulative bytes fit under ``share * t + burst``.  Any extra wait
-    imposed by (ii) is reported as bandwidth stall.  With ``share == inf``
-    this reduces exactly to the base port model.
+
+class EpochBandwidthLoadModel(LoadStreamModel):
+    """Token-bucket arbiter under a piecewise-constant share schedule.
+
+    ``shares[e]`` is this core's bytes/cycle allowance during epoch ``e``
+    (the interval ``[e * epoch_cycles, (e+1) * epoch_cycles)``); epochs past
+    the end of the schedule run at ``tail_share`` (the cluster passes the
+    full chip budget there: by construction every other core has drained by
+    then).  Unused allowance accumulates only up to ``burst_bytes`` -- a core
+    cannot bank unbounded credit and replay it later -- which is what makes
+    the per-epoch conservation property hold:
+
+        bytes granted per epoch  <=  share * epoch_cycles + burst_bytes
+                                     + one in-flight tile
+
+    (the tile term covers the single grant that straddles the epoch edge;
+    asserted by ``tests/test_multicore.py``).  A request larger than the
+    bucket capacity is granted once the bucket is full and leaves the token
+    count negative (debt repaid by subsequent refill), so any tile size
+    works with any ``burst_bytes`` including 0.
     """
 
-    def __init__(self, load_ports: int, bytes_per_cycle: float,
-                 burst_bytes: float = 16384.0):
-        self.bytes_per_cycle = bytes_per_cycle
+    def __init__(self, load_ports: int, shares: Sequence[float],
+                 epoch_cycles: float, tail_share: float,
+                 burst_bytes: float = 16384.0,
+                 store_ports: int | None = None,
+                 charge_store_bytes: bool = False,
+                 record_grants: bool = False):
+        if epoch_cycles <= 0:
+            raise ValueError("epoch_cycles must be > 0")
+        self.shares = tuple(shares)
+        self.epoch_cycles = epoch_cycles
+        self.tail_share = tail_share
+        self._schedule_end = len(self.shares) * epoch_cycles if shares else 0.0
         self.burst_bytes = burst_bytes
-        super().__init__(load_ports)
+        self.charge_store_bytes = charge_store_bytes
+        self.record_grants = record_grants
+        super().__init__(load_ports, store_ports)
 
     def reset(self) -> None:
         super().reset()
-        self._bytes = 0.0
+        self._tokens = self.burst_bytes
+        self._t = 0.0           # bucket time: refills are settled up to here
+        #: (start, n_bytes) of every granted access, when record_grants.
+        self.grants: list[tuple[float, int]] = []
+
+    def _share_at(self, t: float) -> float:
+        e = int(t // self.epoch_cycles)
+        return self.shares[e] if e < len(self.shares) else self.tail_share
+
+    def _advance(self, t: float) -> None:
+        """Settle refills from the bucket time up to ``t`` (capped)."""
+        while self._t < t:
+            rate = self._share_at(self._t)
+            if self._t >= self._schedule_end:
+                step_end = t        # constant tail rate: one jump
+            else:
+                e_end = ((int(self._t // self.epoch_cycles) + 1)
+                         * self.epoch_cycles)
+                step_end = min(t, e_end)
+            if math.isinf(rate):
+                self._tokens = self.burst_bytes
+            else:
+                self._tokens = min(self.burst_bytes,
+                                   self._tokens + rate * (step_end - self._t))
+            self._t = step_end
+
+    def _grant(self, t_earliest: float, n_bytes: int) -> float:
+        """Earliest start >= ``t_earliest`` at which ``n_bytes`` is granted,
+        consuming the tokens.  Requests behind the bucket time (out-of-order
+        stores, whose ready times are not monotone in issue order) are
+        served from the current bucket state without rewinding it."""
+        self._advance(t_earliest)
+        need = min(float(n_bytes), self.burst_bytes)
+        if self._tokens >= need:
+            start = t_earliest
+        else:
+            t, tokens = self._t, self._tokens
+            schedule_end = self._schedule_end
+            while True:
+                rate = self._share_at(t)
+                if math.isinf(rate):
+                    start = t
+                    break
+                if rate <= 0.0 and t >= schedule_end:
+                    raise RuntimeError("tail share must be > 0: request can "
+                                       "never be granted")
+                e_end = (int(t // self.epoch_cycles) + 1) * self.epoch_cycles
+                if rate > 0.0:
+                    t_hit = t + (need - tokens) / rate
+                    if t_hit <= e_end or t >= schedule_end:
+                        start = t_hit
+                        break
+                    tokens += rate * (e_end - t)
+                t = e_end
+            start = max(start, t_earliest)
+        self._advance(start)
+        self._tokens -= n_bytes
+        if self.record_grants:
+            self.grants.append((start, n_bytes))
+        return start
 
     def acquire(self, t_request: float, n_bytes: int) -> tuple[float, float]:
         port_start = max(t_request, self._next_free)
-        if math.isinf(self.bytes_per_cycle):
-            t_bw = 0.0
-        else:
-            t_bw = (self._bytes + n_bytes - self.burst_bytes) / self.bytes_per_cycle
-        start = max(port_start, t_bw)
-        self._bytes += n_bytes
+        start = self._grant(port_start, n_bytes)
         self._next_free = start + 1.0 / self.load_ports
+        self.last_grant = max(self.last_grant, start)
         return start, start - port_start
+
+    def acquire_store(self, t_request: float, n_bytes: int) -> tuple[float, float]:
+        if self.store_ports is None:
+            return t_request, 0.0
+        port_start = max(t_request, self._store_next_free)
+        if self.charge_store_bytes:
+            start = self._grant(port_start, n_bytes)
+        else:
+            start = port_start
+        self._store_next_free = start + 1.0 / self.store_ports
+        self.last_grant = max(self.last_grant, start)
+        return start, start - port_start
+
+
+class SharedBandwidthLoadModel(EpochBandwidthLoadModel):
+    """Constant-share token bucket: the ``arbitration="static"`` model.
+
+    The frozen-share baseline: one share for the whole run, i.e. an
+    :class:`EpochBandwidthLoadModel` with an empty schedule and
+    ``tail_share=bytes_per_cycle``.  Sharing the exact bucket semantics with
+    the epoch model matters: the dynamic schedule's shares dominate the
+    static share pointwise in time, so with identical bucket mechanics the
+    dynamic makespan provably never exceeds the static one.  A load of
+    ``n_bytes`` requested at ``t`` may start once (i) a load port slot is
+    free and (ii) ``n_bytes`` tokens are available (refill ``share`` per
+    cycle, capped at ``burst_bytes``).  With ``share == inf`` this reduces
+    exactly to the base port model.
+    """
+
+    def __init__(self, load_ports: int, bytes_per_cycle: float,
+                 burst_bytes: float = 16384.0,
+                 store_ports: int | None = None,
+                 charge_store_bytes: bool = False):
+        self.bytes_per_cycle = bytes_per_cycle
+        super().__init__(load_ports, shares=(), epoch_cycles=math.inf,
+                         tail_share=bytes_per_cycle, burst_bytes=burst_bytes,
+                         store_ports=store_ports,
+                         charge_store_bytes=charge_store_bytes)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArbiterTrace:
+    """Per-epoch outcome of the dynamic arbitration fixed point."""
+
+    epoch_cycles: float
+    #: bytes/cycle granted to each *active* core, per epoch
+    shares: tuple[float, ...]
+    #: number of cores still drawing on the budget, per epoch
+    n_active: tuple[int, ...]
+    #: relaxation rounds until the activity horizons converged
+    rounds: int
 
 
 @dataclasses.dataclass(frozen=True)
 class ChipConfig:
     """A CMP of ``n_cores`` identical RASA-equipped cores.
 
-    ``bw_bytes_per_cycle`` is the chip-wide tile-load budget in bytes per
+    ``bw_bytes_per_cycle`` is the chip-wide tile-traffic budget in bytes per
     *engine* cycle; the default 256 B/cyc corresponds to 128 GB/s at the
     paper's 500 MHz engine clock -- ample for one core (so ``n_cores=1``
     reduces exactly to the single-core simulator) but binding for several
     aggressive engines.  Use ``math.inf`` for a contention-free chip.
+
+    ``arbitration`` selects the contention model (``"epoch"`` dynamic
+    time-sliced shares recomputed every ``epoch_cycles``; ``"static"`` the
+    frozen equal-share baseline).  ``store_bytes_shared=False`` recovers the
+    PR-1 loads-only accounting where ``rasa_ts`` stores are free.
     """
 
     n_cores: int = 4
@@ -73,6 +231,9 @@ class ChipConfig:
     bw_bytes_per_cycle: float = 256.0
     bw_burst_bytes: float = 16384.0
     policy: RegPolicy = ALG1_POLICY
+    arbitration: str = "epoch"
+    epoch_cycles: float = 1024.0
+    store_bytes_shared: bool = True
 
     def __post_init__(self):
         if self.n_cores < 1:
@@ -82,10 +243,21 @@ class ChipConfig:
                              "for a contention-free chip)")
         if self.bw_burst_bytes < 0:
             raise ValueError("bw_burst_bytes must be >= 0")
+        if self.arbitration not in ARBITRATIONS:
+            raise ValueError(f"unknown arbitration {self.arbitration!r}; "
+                             f"available: {ARBITRATIONS}")
+        if not self.epoch_cycles > 0:
+            raise ValueError("epoch_cycles must be > 0")
 
     @property
     def engine(self) -> EngineConfig:
         return get_design(self.design)
+
+    @property
+    def store_ports(self) -> int | None:
+        """Store-port count handed to the arbiter models (None = stores
+        free, the loads-only accounting switch)."""
+        return self.engine.store_ports if self.store_bytes_shared else None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,6 +280,17 @@ class ChipReport:
     wl_skips: int
     macs: int
     per_core_gemms: tuple[tuple[str, ...], ...] = ()
+    #: contention model that produced this report ("epoch" or "static")
+    arbitration: str = "static"
+    #: scheduling-epoch length in engine cycles (0 for the static model)
+    epoch_cycles: float = 0.0
+    #: bytes/cycle granted to each active core, per epoch (static: one
+    #: entry covering the whole run)
+    share_trace: tuple[float, ...] = ()
+    #: cores still drawing on the shared budget, per epoch
+    active_trace: tuple[int, ...] = ()
+    #: relaxation rounds the epoch arbiter needed (1 for static)
+    arb_rounds: int = 1
 
     @property
     def speedup(self) -> float:
@@ -119,10 +302,29 @@ class ChipReport:
         return self.speedup / self.n_cores
 
     @property
+    def occupied_core_cycles(self) -> float:
+        """Aggregate occupied core-cycles: makespan x cores that ran work.
+
+        A core that drained early still *occupies* its slot until the chip
+        finishes (nothing else can be placed on it within this run), so this
+        -- not ``sum(per_core_cycles)`` -- is the denominator against which
+        chip-level overheads are meaningfully normalized.
+        """
+        active = sum(1 for c in self.per_core_cycles if c > 0)
+        return self.cycles * active
+
+    @property
     def bw_stall_share(self) -> float:
-        """Share of aggregate core-cycles lost waiting on shared bandwidth."""
-        busy = sum(self.per_core_cycles)
-        return self.bw_stall_cycles / busy if busy else 0.0
+        """Share of occupied core-cycles (makespan x active cores) lost
+        waiting on shared bandwidth.
+
+        Defined against :attr:`occupied_core_cycles` rather than
+        ``sum(per_core_cycles)``: mixing drained-early cores' short runtimes
+        into the denominator would inflate the apparent stall share on
+        skewed workloads.
+        """
+        occupied = self.occupied_core_cycles
+        return self.bw_stall_cycles / occupied if occupied else 0.0
 
     @property
     def wlbp_rate(self) -> float:
@@ -136,32 +338,130 @@ class CoreCluster:
         self.chip = chip
 
     def run_streams(self, streams: Sequence[Sequence[Instr]]
-                    ) -> tuple[list[TimingResult], list[float]]:
-        """Simulate every core's stream under its bandwidth share.
+                    ) -> tuple[list[TimingResult], list[float],
+                               ArbiterTrace | None]:
+        """Simulate every core's stream under the chip's arbitration model.
 
-        Returns ``(results, contention_stalls)`` where ``contention_stalls[i]``
-        is how many cycles core *i* lost to the shared-bandwidth throttle
-        (its throttled runtime minus its unthrottled runtime -- 0 whenever
-        the budget does not bind).
+        Returns ``(results, contention_stalls, trace)`` where
+        ``contention_stalls[i]`` is how many cycles core *i* lost to the
+        shared-bandwidth throttle (its throttled runtime minus its
+        unthrottled runtime -- 0 whenever the budget does not bind) and
+        ``trace`` is the per-epoch :class:`ArbiterTrace` (None only when
+        there is nothing to arbitrate).
         """
+        if self.chip.arbitration == "static":
+            return self._run_static(streams)
+        return self._run_epoch(streams)
+
+    # -- shared helpers ----------------------------------------------------
+    def _demands_bandwidth(self, stream: Sequence[Instr]) -> bool:
+        """Does this stream put any traffic on the shared memory system?"""
+        charge_stores = self.chip.store_bytes_shared
+        return any(ins.op is Op.TL or (charge_stores and ins.op is Op.TS)
+                   for ins in stream)
+
+    def _contention_stall(self, stream: Sequence[Instr],
+                          res: TimingResult) -> float:
+        """End-to-end cycles this core lost to the bandwidth throttle."""
+        if res.load_stall_cycles == 0.0:
+            # the arbiter never delayed an access: the run is identical to
+            # an unthrottled one, so skip the reference re-simulation.
+            return 0.0
         cfg = self.chip.engine
-        n_active = sum(1 for s in streams if s) or 1
-        share = self.chip.bw_bytes_per_cycle / n_active
+        free_model = LoadStreamModel(cfg.load_ports, self.chip.store_ports)
+        free = PipelineSimulator(cfg, load_model=free_model).run(stream)
+        return max(0.0, res.cycles - free.cycles)
+
+    # -- static equal shares (PR-1 baseline) -------------------------------
+    def _run_static(self, streams: Sequence[Sequence[Instr]]):
+        chip = self.chip
+        cfg = chip.engine
+        demand = [self._demands_bandwidth(s) for s in streams]
+        n_active = sum(demand) or 1
+        share = chip.bw_bytes_per_cycle / n_active
         results, stalls = [], []
         for stream in streams:
-            model = SharedBandwidthLoadModel(cfg.load_ports, share,
-                                             self.chip.bw_burst_bytes)
+            model = SharedBandwidthLoadModel(
+                cfg.load_ports, share, chip.bw_burst_bytes,
+                store_ports=chip.store_ports,
+                charge_store_bytes=chip.store_bytes_shared)
             res = PipelineSimulator(cfg, load_model=model).run(stream)
-            if res.load_stall_cycles == 0.0:
-                # the arbiter never delayed a load: the run is identical to
-                # an unthrottled one, so skip the reference re-simulation.
-                stall = 0.0
-            else:
-                free = PipelineSimulator(cfg).run(stream)
-                stall = max(0.0, res.cycles - free.cycles)
             results.append(res)
-            stalls.append(stall)
-        return results, stalls
+            stalls.append(self._contention_stall(stream, res))
+        trace = ArbiterTrace(epoch_cycles=0.0, shares=(share,),
+                             n_active=(n_active,), rounds=1)
+        return results, stalls, trace
+
+    # -- epoch-based dynamic arbitration (the fixed model) -----------------
+    def _build_schedule(self, end_epoch: Sequence[int | None]
+                        ) -> tuple[list[float], list[int]]:
+        """Per-epoch (share, n_active) from the cores' activity horizons.
+
+        ``end_epoch[i]`` is the first epoch in which core *i* no longer
+        draws on the budget (None = active indefinitely, used by the
+        opening relaxation round).
+        """
+        budget = self.chip.bw_bytes_per_cycle
+        horizon = max((e for e in end_epoch if e is not None), default=0)
+        n_forever = sum(1 for e in end_epoch if e is None)
+        shares, n_active = [], []
+        for e in range(horizon):
+            n = n_forever + sum(1 for h in end_epoch
+                                if h is not None and h > e)
+            shares.append(budget / n if n else budget)
+            n_active.append(n)
+        return shares, n_active
+
+    def _run_epoch(self, streams: Sequence[Sequence[Instr]]):
+        chip = self.chip
+        cfg = chip.engine
+        E = chip.epoch_cycles
+        budget = chip.bw_bytes_per_cycle
+        demand = [self._demands_bandwidth(s) for s in streams]
+
+        # Opening round: every demanding core is assumed active forever,
+        # which makes the schedule the static equal-share model.  Each
+        # round re-simulates all cores under the current schedule, reads
+        # off when each core's last access was granted, and shrinks the
+        # activity horizons accordingly; shrinking horizons only ever
+        # *raise* later epochs' shares, so finish times -- and with them
+        # the horizons -- decrease monotonically until the fixed point.
+        end_epoch: list[int | None] = [None if d else 0 for d in demand]
+        n_forever = sum(1 for e in end_epoch if e is None)
+        tail = budget / n_forever if n_forever else budget
+
+        results: list[TimingResult] = []
+        rounds = 0
+        shares: list[float] = []
+        n_active: list[int] = []
+        for rounds in range(1, MAX_ARBITER_ROUNDS + 1):
+            shares, n_active = self._build_schedule(end_epoch)
+            results, new_end = [], []
+            for i, stream in enumerate(streams):
+                model = EpochBandwidthLoadModel(
+                    cfg.load_ports, shares, E,
+                    tail_share=tail if end_epoch[i] is None else budget,
+                    burst_bytes=chip.bw_burst_bytes,
+                    store_ports=chip.store_ports,
+                    charge_store_bytes=chip.store_bytes_shared)
+                results.append(PipelineSimulator(cfg, load_model=model)
+                               .run(stream))
+                if not demand[i]:
+                    new_end.append(0)
+                else:
+                    e = int(model.last_grant // E) + 1
+                    prev = end_epoch[i]
+                    new_end.append(e if prev is None else min(prev, e))
+            if new_end == end_epoch:
+                break
+            end_epoch = new_end
+            tail = budget     # all horizons finite from round 2 on
+
+        stalls = [self._contention_stall(s, r)
+                  for s, r in zip(streams, results)]
+        trace = ArbiterTrace(epoch_cycles=E, shares=tuple(shares),
+                             n_active=tuple(n_active), rounds=rounds)
+        return results, stalls, trace
 
 
 def _lower_many(specs: Sequence[GemmSpec], policy: RegPolicy) -> list[Instr]:
@@ -174,7 +474,8 @@ def _lower_many(specs: Sequence[GemmSpec], policy: RegPolicy) -> list[Instr]:
 def _aggregate(chip: ChipConfig, workload_name: str, strategy: str,
                shards: Sequence[Sequence[GemmSpec]],
                results: Sequence[TimingResult], stalls: Sequence[float],
-               single_core_cycles: float) -> ChipReport:
+               single_core_cycles: float,
+               trace: ArbiterTrace | None = None) -> ChipReport:
     cycles = max((r.cycles for r in results), default=0.0)
     peak = chip.engine.peak_macs_per_cycle
     chip_util = (sum(r.useful_macs for r in results)
@@ -194,6 +495,11 @@ def _aggregate(chip: ChipConfig, workload_name: str, strategy: str,
         wl_skips=sum(r.wl_skips for r in results),
         macs=sum(int(s.macs) for shard in shards for s in shard),
         per_core_gemms=tuple(tuple(s.name for s in shard) for shard in shards),
+        arbitration=chip.arbitration,
+        epoch_cycles=trace.epoch_cycles if trace else 0.0,
+        share_trace=trace.shares if trace else (),
+        active_trace=trace.n_active if trace else (),
+        arb_rounds=trace.rounds if trace else 1,
     )
 
 
@@ -202,7 +508,9 @@ def _single_core_cycles_cached(chip: ChipConfig,
                                specs: tuple[GemmSpec, ...]) -> float:
     cfg = chip.engine
     model = SharedBandwidthLoadModel(cfg.load_ports, chip.bw_bytes_per_cycle,
-                                     chip.bw_burst_bytes)
+                                     chip.bw_burst_bytes,
+                                     store_ports=chip.store_ports,
+                                     charge_store_bytes=chip.store_bytes_shared)
     sim = PipelineSimulator(cfg, load_model=model)
     return sim.run(_lower_many(specs, chip.policy)).cycles
 
@@ -218,9 +526,9 @@ def partitioned_chip_report(spec: GemmSpec, chip: ChipConfig,
     """Shard one GEMM across the chip's cores and report scaling."""
     shards = partition_gemm(spec, chip.n_cores, strategy)
     streams = [_lower_many(shard, chip.policy) for shard in shards]
-    results, stalls = CoreCluster(chip).run_streams(streams)
+    results, stalls, trace = CoreCluster(chip).run_streams(streams)
     return _aggregate(chip, spec.name, strategy, shards, results, stalls,
-                      _single_core_cycles(chip, [spec]))
+                      _single_core_cycles(chip, [spec]), trace)
 
 
 def simulate_chip(workload, chip: ChipConfig | None = None, *,
@@ -229,9 +537,11 @@ def simulate_chip(workload, chip: ChipConfig | None = None, *,
     """Chip-level analogue of :func:`repro.core.simulate`.
 
     ``workload`` is either one :class:`GemmSpec` -- partitioned across cores
-    with ``partition`` -- or a sequence of specs, scheduled whole-GEMM-per-
-    core with ``scheduler`` (see :mod:`repro.multicore.scheduler`).  Extra
-    keyword arguments construct the :class:`ChipConfig` when none is given.
+    with ``partition`` -- or a sequence of specs, scheduled with
+    ``scheduler`` (see :mod:`repro.multicore.scheduler`; the ``gang``
+    scheduler also uses ``partition`` to split dominant GEMMs across idle
+    cores).  Extra keyword arguments construct the :class:`ChipConfig` when
+    none is given.
     """
     if chip is None:
         chip = ChipConfig(**chip_kwargs)
@@ -241,4 +551,5 @@ def simulate_chip(workload, chip: ChipConfig | None = None, *,
     if isinstance(workload, GemmSpec):
         return partitioned_chip_report(workload, chip, partition)
     from .scheduler import scheduled_chip_report
-    return scheduled_chip_report(list(workload), chip, scheduler)
+    return scheduled_chip_report(list(workload), chip, scheduler,
+                                 partition=partition)

@@ -63,6 +63,22 @@ def _best_grid(n_cores: int, mt: int, nt: int) -> tuple[int, int]:
     return best[1]
 
 
+def split_ways(spec: GemmSpec, ways: int, strategy: str = "m_split",
+               tile_m: int = TILE_M, tile_n: int = TILE_N) -> list[GemmSpec]:
+    """The non-empty shards of ``spec`` split ``ways`` ways.
+
+    Gang-scheduling helper: unlike :func:`partition_gemm` this drops empty
+    shards (a gang never occupies a core it has no tiles for) and returns a
+    flat list.  ``ways=1`` returns ``[spec]`` unchanged, so a gang of one is
+    exactly the whole-GEMM placement.
+    """
+    if ways == 1:
+        return [spec]
+    return [s for shard in partition_gemm(spec, ways, strategy,
+                                          tile_m=tile_m, tile_n=tile_n)
+            for s in shard]
+
+
 def partition_gemm(spec: GemmSpec, n_cores: int, strategy: str = "m_split",
                    tile_m: int = TILE_M, tile_n: int = TILE_N
                    ) -> list[list[GemmSpec]]:

@@ -2,9 +2,7 @@
 
 One model layer = one GEMM; a workload is the list of layer GEMMs (e.g.
 ``repro.core.workloads.TABLE_I`` values or the per-layer traces derived from
-``repro.configs``).  Each GEMM runs whole on a single core (layer-level
-parallelism -- intra-GEMM partitioning is :mod:`repro.multicore.partition`'s
-job); the scheduler decides the GEMM -> core placement:
+``repro.configs``).  The scheduler decides the GEMM -> core placement:
 
   round_robin -- static: GEMM ``i`` goes to core ``i % n_cores``, blind to
                  cost.  The baseline every dynamic policy must beat.
@@ -16,19 +14,41 @@ job); the scheduler decides the GEMM -> core placement:
   lpt         -- work_queue with GEMMs sorted longest-first (classic LPT
                  bound); better balance when the workload is skewed but
                  ignores submission order.
+  gang        -- lpt that may *split* a GEMM instead of placing it whole:
+                 for each GEMM (longest first) it considers every gang
+                 width ``w`` in 1..n_cores, shards the GEMM ``w`` ways with
+                 :func:`repro.multicore.partition.split_ways`, places the
+                 shards on the ``w`` soonest-free cores, and keeps the
+                 width with the earliest estimated completion; the split
+                 schedule is used only if it beats the whole-GEMM LPT
+                 schedule's estimated makespan (splitting re-streams
+                 operands, so it must pay for itself).  This is the
+                 combined partition x schedule policy: a dominant GEMM
+                 that would leave cores idle under whole-GEMM LPT gets
+                 gang-split across them.
+
+The first three place each GEMM whole on a single core (layer-level
+parallelism); only ``gang`` combines inter- and intra-GEMM parallelism.
 """
 
 from __future__ import annotations
+
+import dataclasses
 
 from ..core.simulator import _simulate_cached
 from ..core.tiling import GemmSpec
 from .chip import (ChipConfig, ChipReport, CoreCluster, _aggregate,
                    _lower_many, _single_core_cycles)
+from .partition import split_ways
 
-SCHEDULERS = ("round_robin", "work_queue", "lpt")
+SCHEDULERS = ("round_robin", "work_queue", "lpt", "gang")
 
 
 def _estimate_cycles(spec: GemmSpec, chip: ChipConfig) -> float:
+    # cost depends only on the dims, but the lru_cache key includes the
+    # name -- canonicalize it so equal-dim shards ("x@c0", "x@c1", ...)
+    # and repeated layers hit one cache entry instead of re-simulating.
+    spec = dataclasses.replace(spec, name="")
     return _simulate_cached(spec, chip.engine.name, chip.policy).cycles
 
 
@@ -53,26 +73,85 @@ def assign_work_queue(specs: list[GemmSpec], n_cores: int, chip: ChipConfig,
     return out
 
 
+def assign_gang(specs: list[GemmSpec], chip: ChipConfig,
+                partition: str = "m_split") -> list[list[GemmSpec]]:
+    """LPT with gang splitting: shard GEMMs across soon-free cores when the
+    whole-GEMM schedule would leave cores idle under a dominant GEMM.
+
+    Two candidate schedules are built deterministically and the one with
+    the smaller estimated makespan wins (ties go to whole-GEMM placement,
+    since splitting re-streams operands and so must pay for itself):
+
+    * the plain whole-GEMM LPT schedule;
+    * a greedy gang schedule: GEMMs longest-first, each placed at the gang
+      width ``w`` in 1..n_cores whose sharded placement (longest shards on
+      the soonest-free cores) completes earliest.
+
+    On a balanced workload the greedy splitter serializes gangs and loses,
+    so gang placement degenerates to LPT exactly; on a skewed one the
+    dominant GEMM is split across the cores LPT would have idled.  With
+    ``n_cores == 1`` this is the whole workload, in submission order, on
+    core 0 -- the single-core reduction the tests pin down.
+    """
+    n_cores = chip.n_cores
+    if n_cores == 1:
+        return [list(specs)]
+    est = lambda s: _estimate_cycles(s, chip)
+
+    whole = assign_work_queue(specs, n_cores, chip, longest_first=True)
+    whole_makespan = max(sum(est(s) for s in core) for core in whole)
+
+    order = sorted(specs, key=lambda s: -est(s))
+    gang: list[list[GemmSpec]] = [[] for _ in range(n_cores)]
+    free_at = [0.0] * n_cores
+    for spec in order:
+        best: tuple[float, int] | None = None
+        best_placement: list[tuple[int, GemmSpec]] = []
+        for w in range(1, n_cores + 1):
+            shards = split_ways(spec, w, partition)
+            if len(shards) < w:
+                continue            # more gang slots than tiles at this width
+            cores = sorted(range(n_cores), key=lambda c: free_at[c])[:w]
+            shards = sorted(shards, key=lambda s: -est(s))
+            placement = list(zip(cores, shards))
+            completion = max(free_at[c] + est(s) for c, s in placement)
+            if best is None or (completion, w) < best:
+                best = (completion, w)
+                best_placement = placement
+        for core, shard in best_placement:
+            gang[core].append(shard)
+            free_at[core] += est(shard)
+    return gang if max(free_at) < whole_makespan else whole
+
+
 def assign(specs: list[GemmSpec], chip: ChipConfig,
-           scheduler: str = "work_queue") -> list[list[GemmSpec]]:
+           scheduler: str = "work_queue",
+           partition: str = "m_split") -> list[list[GemmSpec]]:
     if scheduler == "round_robin":
         return assign_round_robin(specs, chip.n_cores)
     if scheduler == "work_queue":
         return assign_work_queue(specs, chip.n_cores, chip)
     if scheduler == "lpt":
         return assign_work_queue(specs, chip.n_cores, chip, longest_first=True)
+    if scheduler == "gang":
+        return assign_gang(specs, chip, partition)
     raise ValueError(f"unknown scheduler {scheduler!r}; available: {SCHEDULERS}")
 
 
 def scheduled_chip_report(specs: list[GemmSpec], chip: ChipConfig,
-                          scheduler: str = "work_queue") -> ChipReport:
+                          scheduler: str = "work_queue",
+                          partition: str = "m_split") -> ChipReport:
     """Place ``specs`` on cores, simulate each core's concatenated stream
-    under the shared-bandwidth model, and aggregate chip-level results."""
+    under the shared-bandwidth model, and aggregate chip-level results.
+
+    ``partition`` selects the sharding strategy the ``gang`` scheduler uses
+    when it splits a GEMM (ignored by the whole-GEMM schedulers).
+    """
     if not specs:
         raise ValueError("empty workload")
-    shards = assign(specs, chip, scheduler)
+    shards = assign(specs, chip, scheduler, partition)
     streams = [_lower_many(shard, chip.policy) for shard in shards]
-    results, stalls = CoreCluster(chip).run_streams(streams)
+    results, stalls, trace = CoreCluster(chip).run_streams(streams)
     name = f"{specs[0].name}+{len(specs) - 1}" if len(specs) > 1 else specs[0].name
     return _aggregate(chip, name, scheduler, shards, results, stalls,
-                      _single_core_cycles(chip, specs))
+                      _single_core_cycles(chip, specs), trace)

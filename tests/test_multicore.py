@@ -1,20 +1,33 @@
 """Multi-core chip model tests: partition coverage, single-core reduction,
-scaling monotonicity, bandwidth contention, and workload scheduling."""
+scaling monotonicity, bandwidth contention (static + epoch-dynamic
+arbitration, conservation), store-traffic accounting, and workload
+scheduling including gang splits."""
 
 import dataclasses
 import math
+from collections import defaultdict
 
 import pytest
 
+from _hypothesis_compat import given, settings, st
 from repro.core import DESIGNS, GemmSpec, TABLE_I, simulate
+from repro.core.designs import get_design
 from repro.core.engine import simulate_chip as core_simulate_chip
-from repro.multicore import (ChipConfig, SharedBandwidthLoadModel,
-                             partition_gemm, simulate_chip)
+from repro.core.timing import LoadStreamModel, PipelineSimulator
+from repro.multicore import (ChipConfig, EpochBandwidthLoadModel,
+                             SharedBandwidthLoadModel, partition_gemm,
+                             simulate_chip, split_ways)
+from repro.multicore.chip import CoreCluster, _lower_many
 from repro.multicore.partition import PARTITIONERS, _best_grid
 from repro.multicore.scheduler import assign
 
 SMALL = GemmSpec("small", 128, 256, 256)
 ODD = GemmSpec("odd", 200, 96, 150)       # edge tiles in M and N
+TILE_BYTES = 1024                         # largest single tile transfer
+
+
+def _skewed_workload():
+    return [TABLE_I["DLRM-2"], SMALL, SMALL, SMALL, SMALL, SMALL]
 
 
 # ------------------------------------------------------------- partitioners
@@ -40,6 +53,16 @@ def test_partition_more_cores_than_tiles():
     assert occupied[0][0].M == 16
 
 
+def test_split_ways_drops_empty_shards():
+    assert split_ways(SMALL, 1, "m_split") == [SMALL]   # identity at w=1
+    tiny = GemmSpec("tiny", 16, 32, 16)
+    shards = split_ways(tiny, 8, "m_split")
+    assert len(shards) == 1 and shards[0].M == 16
+    four = split_ways(SMALL, 4, "m_split")
+    assert len(four) == 4
+    assert sum(s.macs for s in four) == SMALL.macs
+
+
 def test_best_grid_prefers_square():
     assert _best_grid(16, 64, 64) == (4, 4)
     assert sorted(_best_grid(8, 64, 64)) == [2, 4]
@@ -63,6 +86,21 @@ def test_n1_reduces_to_single_core_simreport(design, strategy):
     assert rep.speedup == 1.0 and rep.efficiency == 1.0
     assert rep.bw_stall_cycles == 0.0
     assert rep.utilization == pytest.approx(ref.utilization)
+
+
+@pytest.mark.parametrize("arbitration", ["epoch", "static"])
+@pytest.mark.parametrize("scheduler", ["work_queue", "gang"])
+def test_n1_scheduler_reduces_to_single_core(scheduler, arbitration):
+    """At n_cores=1 the scheduler entry point (submission order preserved by
+    work_queue and gang) must reproduce the plain unthrottled single-core
+    simulation of the concatenated workload, under both arbitrations."""
+    wl = [SMALL, TABLE_I["DLRM-2"], SMALL]
+    chip = ChipConfig(n_cores=1, design="RASA-WLBP", arbitration=arbitration)
+    cfg = chip.engine
+    ref = PipelineSimulator(cfg).run(_lower_many(wl, chip.policy)).cycles
+    rep = simulate_chip(wl, chip, scheduler=scheduler)
+    assert rep.cycles == ref
+    assert rep.bw_stall_cycles == 0.0
 
 
 def test_engine_reexport_delegates():
@@ -98,6 +136,25 @@ def test_bandwidth_binds_and_degrades_efficiency():
     assert 0.0 < tight.bw_stall_share < 1.0
 
 
+def test_bw_stall_share_occupied_semantics():
+    """bw_stall_share is defined against occupied core-cycles: makespan x
+    cores that ran work -- not the sum of per-core runtimes, which would let
+    drained-early cores shrink the denominator."""
+    rep = simulate_chip(SMALL, ChipConfig(n_cores=8, design="RASA-DMDB-WLS",
+                                          bw_bytes_per_cycle=64.0))
+    active = sum(1 for c in rep.per_core_cycles if c > 0)
+    assert rep.occupied_core_cycles == rep.cycles * active
+    assert rep.bw_stall_share == pytest.approx(
+        rep.bw_stall_cycles / (rep.cycles * active))
+    # more cores than tile rows: idle cores must not enter the denominator
+    tiny = GemmSpec("tiny2", 32, 64, 32)    # 2 tile rows
+    rep = simulate_chip(tiny, ChipConfig(n_cores=8, design="BASE"),
+                        partition="m_split")
+    assert sum(1 for c in rep.per_core_cycles if c > 0) == 2
+    assert rep.occupied_core_cycles == rep.cycles * 2
+
+
+# ------------------------------------------------------- arbitration models
 def test_shared_bandwidth_model_reduces_to_port_model():
     """share=inf must reproduce the plain load-port arbiter exactly."""
     model = SharedBandwidthLoadModel(2, math.inf)
@@ -114,11 +171,159 @@ def test_throttle_delays_and_reports_stall():
     assert s1 == pytest.approx(1024.0 - 0.5)
 
 
+def test_token_bucket_caps_banked_allowance():
+    """A core idle for a long time cannot bank unbounded credit: allowance
+    accrual is capped at burst_bytes (a cumulative leaky-bucket line would
+    grant ~98 banked tiles at t=100000 before throttling again)."""
+    model = SharedBandwidthLoadModel(2, 1.0, burst_bytes=1024.0)
+    model.acquire(0.0, 1024)                # drains the initial burst
+    t1, _ = model.acquire(100_000.0, 1024)  # banked tokens capped at 1024
+    t2, _ = model.acquire(100_000.0, 1024)  # bank exhausted: refill first
+    assert t1 == pytest.approx(100_000.0)
+    assert t2 == pytest.approx(100_000.0 + 1024.0)
+
+
+def test_epoch_model_share_schedule_steps():
+    """Shares step at epoch boundaries: a core alone from epoch 1 on is
+    granted at the full budget there."""
+    model = EpochBandwidthLoadModel(1, shares=(8.0,), epoch_cycles=100.0,
+                                    tail_share=64.0, burst_bytes=400.0)
+    t0, _ = model.acquire(0.0, 400)   # initial burst: granted immediately
+    t1, _ = model.acquire(0.0, 400)   # 8 B/cyc: next 400 B ready at ~50
+    t2, _ = model.acquire(0.0, 400)   # rest of epoch 0 refills exactly 400
+    t3, _ = model.acquire(0.0, 400)   # epoch 1: tail share 64 B/cyc kicks in
+    assert t0 == pytest.approx(0.0)
+    assert t1 == pytest.approx(50.0)
+    assert t2 == pytest.approx(100.0)
+    assert t3 == pytest.approx(100.0 + 400.0 / 64.0, abs=0.2)
+
+
+@given(shares=st.lists(st.floats(min_value=0.5, max_value=64.0),
+                       min_size=1, max_size=8),
+       gaps=st.lists(st.floats(min_value=0.0, max_value=32.0),
+                     min_size=1, max_size=48),
+       sizes=st.lists(st.integers(min_value=1, max_value=2048),
+                      min_size=1, max_size=48),
+       burst=st.floats(min_value=0.0, max_value=4096.0))
+@settings(max_examples=30, deadline=None)
+def test_epoch_conservation_property(shares, gaps, sizes, burst):
+    """Token-bucket conservation: bytes granted within one epoch never
+    exceed that epoch's budget share plus the bounded carryover (burst cap)
+    plus the one grant that straddles the epoch edge."""
+    E = 256.0
+    model = EpochBandwidthLoadModel(2, shares, E, tail_share=8.0,
+                                    burst_bytes=burst, record_grants=True)
+    t = 0.0
+    for gap, size in zip(gaps, sizes):
+        t += gap
+        model.acquire(t, size)
+    per_epoch: dict[int, float] = defaultdict(float)
+    for start, n_bytes in model.grants:
+        per_epoch[int(start // E)] += n_bytes
+    max_tile = max(sizes)
+    for e, granted in per_epoch.items():
+        share = shares[e] if e < len(shares) else 8.0
+        assert granted <= share * E + burst + max_tile + 1e-6, \
+            f"epoch {e}: granted {granted} over budget {share * E}"
+
+
+def test_cluster_epoch_conservation_on_real_streams():
+    """Chip-level conservation: replaying the converged schedule with grant
+    recording, the cores' aggregate bytes per epoch stay within the chip
+    budget (plus per-core burst carryover and straddling-tile slack)."""
+    chip = ChipConfig(n_cores=2, design="RASA-WLBP", bw_bytes_per_cycle=24.0,
+                      bw_burst_bytes=2048.0)
+    cfg = chip.engine
+    shards = assign(_skewed_workload(), chip, "work_queue")
+    streams = [_lower_many(shard, chip.policy) for shard in shards]
+    _, _, trace = CoreCluster(chip).run_streams(streams)
+    assert trace is not None and trace.epoch_cycles == chip.epoch_cycles
+    per_epoch: dict[int, float] = defaultdict(float)
+    for stream in streams:
+        model = EpochBandwidthLoadModel(
+            cfg.load_ports, trace.shares, trace.epoch_cycles,
+            tail_share=chip.bw_bytes_per_cycle,
+            burst_bytes=chip.bw_burst_bytes, store_ports=chip.store_ports,
+            charge_store_bytes=True, record_grants=True)
+        PipelineSimulator(cfg, load_model=model).run(stream)
+        for start, n_bytes in model.grants:
+            per_epoch[int(start // trace.epoch_cycles)] += n_bytes
+    E = trace.epoch_cycles
+    budget = chip.bw_bytes_per_cycle
+    # per-core slack: burst carryover + the straddling tile + one
+    # retroactively-granted store (stores are served out of issue order)
+    slack = chip.n_cores * (chip.bw_burst_bytes + 2 * TILE_BYTES)
+    for e, granted in per_epoch.items():
+        assert granted <= budget * E + slack + 1e-6, f"epoch {e}"
+
+
+def test_dynamic_arbitration_beats_static_on_skew():
+    """Early finishers return their share: on a skewed two-core workload a
+    binding budget makes the epoch model's makespan strictly better than the
+    frozen static-share model, and never worse anywhere."""
+    wl = _skewed_workload()
+    mk = lambda arb, bw: simulate_chip(
+        wl, ChipConfig(n_cores=2, design="RASA-WLBP", bw_bytes_per_cycle=bw,
+                       arbitration=arb), scheduler="work_queue")
+    for bw in (24.0, 48.0, 96.0):
+        dyn, sta = mk("epoch", bw), mk("static", bw)
+        assert dyn.cycles <= sta.cycles, f"bw={bw}"
+        assert dyn.n_mm == sta.n_mm
+    dyn, sta = mk("epoch", 24.0), mk("static", 24.0)
+    assert dyn.bw_stall_cycles > 0.0       # the budget binds...
+    assert dyn.cycles < sta.cycles         # ...and dynamic strictly wins
+    assert dyn.arbitration == "epoch" and sta.arbitration == "static"
+
+
+def test_arbiter_trace_monotone_and_consistent():
+    """The fixed point's activity trace is non-increasing (cores only ever
+    drain) and shares are exactly budget / n_active per epoch."""
+    rep = simulate_chip(_skewed_workload(),
+                        ChipConfig(n_cores=2, design="RASA-WLBP",
+                                   bw_bytes_per_cycle=24.0),
+                        scheduler="work_queue")
+    assert rep.epoch_cycles > 0 and len(rep.share_trace) > 0
+    assert len(rep.share_trace) == len(rep.active_trace)
+    for earlier, later in zip(rep.active_trace, rep.active_trace[1:]):
+        assert earlier >= later
+    for share, n in zip(rep.share_trace, rep.active_trace):
+        assert share == pytest.approx(24.0 / n)
+    assert rep.arb_rounds >= 2             # at least one horizon shrank
+
+
+# ------------------------------------------------------- store accounting
+def test_store_port_serializes_and_charges_bytes():
+    model = SharedBandwidthLoadModel(2, 1.0, burst_bytes=1024.0,
+                                     store_ports=1, charge_store_bytes=True)
+    t0, s0 = model.acquire_store(0.0, 1024)   # rides the burst allowance
+    t1, s1 = model.acquire_store(0.0, 1024)   # waits for tokens to refill
+    assert (t0, s0) == (0.0, 0.0)
+    assert t1 == pytest.approx(1024.0)
+    assert s1 == pytest.approx(1024.0 - 1.0)  # port floor was 1.0
+
+
+def test_loads_only_switch_recovers_free_stores():
+    """store_ports=None (the base model and store_bytes_shared=False) keeps
+    the paper's idealized stores: no serialization, no bytes."""
+    base = LoadStreamModel(2)
+    assert base.acquire_store(3.0, 1 << 20) == (3.0, 0.0)
+    model = SharedBandwidthLoadModel(2, 1.0, burst_bytes=0.0)
+    assert model.acquire_store(3.0, 1 << 20) == (3.0, 0.0)
+
+
+def test_store_traffic_pressures_shared_budget():
+    """Charging rasa_ts bytes against the chip budget can only lengthen a
+    bandwidth-bound run; store_bytes_shared=False recovers the old
+    loads-only makespan."""
+    on = ChipConfig(n_cores=4, design="RASA-DMDB-WLS", bw_bytes_per_cycle=16.0)
+    off = dataclasses.replace(on, store_bytes_shared=False)
+    rep_on = simulate_chip(SMALL, on)
+    rep_off = simulate_chip(SMALL, off)
+    assert rep_on.cycles > rep_off.cycles
+    assert rep_on.n_mm == rep_off.n_mm
+
+
 # ---------------------------------------------------------------- scheduler
-def _skewed_workload():
-    return [TABLE_I["DLRM-2"], SMALL, SMALL, SMALL, SMALL, SMALL]
-
-
 def test_work_queue_beats_round_robin_on_skew():
     """One big GEMM + many small ones on two cores: round-robin piles small
     GEMMs behind the big one, the dynamic queue routes them away."""
@@ -139,6 +344,30 @@ def test_schedulers_cover_all_gemms(scheduler):
     assert names == sorted(s.name for s in wl)
 
 
+def test_gang_splits_dominant_gemm_and_beats_lpt():
+    """A dominant GEMM that would leave cores idle under whole-GEMM LPT is
+    gang-split across them; MACs are conserved through the split."""
+    wl = [TABLE_I["DLRM-2"], SMALL, SMALL, SMALL, SMALL]
+    chip = ChipConfig(n_cores=3, design="RASA-DMDB-WLS")
+    lpt = simulate_chip(wl, chip, scheduler="lpt")
+    gang = simulate_chip(wl, chip, scheduler="gang")
+    assert gang.cycles < lpt.cycles
+    assert gang.macs == lpt.macs == sum(s.macs for s in wl)
+    # the dominant GEMM was actually split: its shards appear on >1 core
+    gang_cores = sum(1 for core in gang.per_core_gemms
+                     if any(n.startswith("DLRM-2") for n in core))
+    assert gang_cores > 1
+
+
+def test_gang_no_split_when_balanced():
+    """On a balanced workload (one equal GEMM per core) splitting cannot
+    finish earlier, so gang degenerates to whole-GEMM placement."""
+    chip = ChipConfig(n_cores=3, design="RASA-WLBP")
+    shards = assign([SMALL, SMALL, SMALL], chip, "gang")
+    assert sorted(len(s) for s in shards) == [1, 1, 1]
+    assert all(s[0].name == "small" for s in shards)
+
+
 def test_chip_report_aggregates():
     rep = simulate_chip(SMALL, ChipConfig(n_cores=4, design="RASA-WLBP"))
     assert len(rep.per_core_cycles) == 4
@@ -153,5 +382,9 @@ def test_chip_report_aggregates():
 def test_chip_config_validation():
     with pytest.raises(ValueError):
         ChipConfig(n_cores=0)
+    with pytest.raises(ValueError):
+        ChipConfig(arbitration="cyclic")
+    with pytest.raises(ValueError):
+        ChipConfig(epoch_cycles=0.0)
     with pytest.raises(ValueError):
         simulate_chip([], ChipConfig(n_cores=2))
