@@ -1,5 +1,6 @@
-"""Perf hillclimb harness: measure roofline terms for config VARIANTS of a
-cell without touching the cached baseline artifacts.
+"""Perf hillclimb harness, two search modes.
+
+Roofline mode (model-config variants, XLA-compiled terms):
 
     PYTHONPATH=src python benchmarks/hillclimb.py --arch grok-1-314b \
         --shape train_4k --variant fused_gate_up --variant remat_dots
@@ -8,21 +9,30 @@ Each variant is a named config transform; the harness compiles the full
 cell (memory proof) + unrolled d0/d_unit (accurate flops/bytes/collectives)
 and prints the three terms next to the baseline.  Results go to
 benchmarks/results/hillclimb/<cell>__<variant>.json.
-"""
 
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+Engine design-search mode (matrix-engine configs, cycle simulator):
+
+    PYTHONPATH=src python benchmarks/hillclimb.py --design-search \
+        --workload bert --steps 20
+
+Hillclimbs the RASA engine design space (array shape under the paper's
+equal-multiplier constraint, control optimizations, LSQ parameters,
+register policy) to minimize simulated cycles on a Table-I workload.
+Every step evaluates the whole neighborhood in one batched fast-backend
+design sweep (``repro.core.sweep_workload``), and perturbed frozen
+``EngineConfig``s hit ``_simulate_cached`` instead of re-simulating.
+Results go to benchmarks/results/hillclimb/design_search__<workload>.json.
+"""
 
 import argparse
 import dataclasses
 import json
+import os
 import sys
 import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
-
-import jax
 
 RESULTS = Path(__file__).resolve().parent / "results" / "hillclimb"
 DRYRUN = Path(__file__).resolve().parent / "results" / "dryrun"
@@ -111,6 +121,8 @@ VARIANTS = {
 
 def measure(arch: str, shape: str, variant: str, full: bool = True) -> dict:
     """Compile the variant cell + reduced-depth artifacts; return terms."""
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    import jax  # noqa: F401  (mesh construction below needs devices)
     from repro.config import SHAPES
     from repro.configs import get_config
     from repro.distributed.sharding import mesh_context
@@ -186,14 +198,170 @@ def measure(arch: str, shape: str, variant: str, full: bool = True) -> dict:
     return out
 
 
+# ------------------------------------------- engine design-space hillclimb
+
+#: Table-I workloads the engine search can optimize for
+SEARCH_WORKLOADS = {
+    "bert": ("BERT-1", "BERT-2", "BERT-3"),
+    "dlrm": ("DLRM-1", "DLRM-2", "DLRM-3"),
+    "mixed": ("DLRM-2", "BERT-1", "DLRM-3", "BERT-3"),
+}
+
+#: equal-multiplier constraint (paper §V: every array has 512 multipliers)
+N_MULTIPLIERS = 512
+
+
+def _engine_candidates(state):
+    """Single-knob neighbors of (engine kwargs, policy) under constraints."""
+    import repro.core.tiling as tiling
+    kw, policy = state
+    POLICIES = (
+        tiling.RegPolicy(mc=2, nc=2, a_regs=2, b_regs=2),
+        tiling.RegPolicy(mc=4, nc=1, a_regs=2, b_regs=1),
+        tiling.RegPolicy(mc=5, nc=1, a_regs=2, b_regs=1),
+        tiling.RegPolicy(mc=1, nc=4, a_regs=1, b_regs=2),
+        tiling.RegPolicy(mc=3, nc=1, a_regs=2, b_regs=2),
+    )
+    out = []
+    for rows in (8, 16, 32, 64):
+        for macs in (1, 2):
+            cols = N_MULTIPLIERS // (rows * macs)
+            if rows * macs * cols != N_MULTIPLIERS or cols < 4 or cols > 64:
+                continue
+            if (rows, macs) != (kw["rows"], kw["macs_per_pe"]):
+                out.append(({**kw, "rows": rows, "cols": cols,
+                             "macs_per_pe": macs}, policy))
+    for flags in ((False, False, False, False), (True, False, False, False),
+                  (True, True, False, False), (True, True, True, True),
+                  (True, False, True, True), (True, True, False, True)):
+        pipe, wlbp, wls, db = flags
+        cand = {**kw, "pipe": pipe, "wlbp": wlbp, "wls": wls,
+                "double_buffer": db}
+        if cand != kw:
+            out.append((cand, policy))
+    for lat in (2, 5, 10, 20):
+        if lat != kw["load_latency"]:
+            out.append(({**kw, "load_latency": lat}, policy))
+    for ports in (1, 2, 4):
+        if ports != kw["load_ports"]:
+            out.append(({**kw, "load_ports": ports}, policy))
+    for pol in POLICIES:
+        if pol != policy:
+            out.append((kw, pol))
+    return out
+
+
+def design_search(workload: str = "bert", steps: int = 20,
+                  backend: str = "fast") -> dict:
+    """Greedy hillclimb over EngineConfig x RegPolicy on simulated cycles."""
+    from repro.core import DESIGNS, TABLE_I, EngineConfig, get_design
+    from repro.core import sweep_workload
+    from repro.core.simulator import _simulate_cached
+    from repro.core.tiling import ALG1_POLICY
+
+    specs = [TABLE_I[k] for k in SEARCH_WORKLOADS[workload]]
+    counter = [0]
+
+    def to_cfg(kw) -> EngineConfig:
+        counter[0] += 1
+        return EngineConfig(name=f"probe-{counter[0]}", **kw)
+
+    seen: dict = {}
+
+    def evaluate(states):
+        """Batched cost of unseen states (total cycles over the workload)."""
+        todo = [s for s in states
+                if (_key(s)) not in seen]
+        by_policy: dict = {}
+        for s in todo:
+            by_policy.setdefault(s[1], []).append(s)
+        for policy, group in by_policy.items():
+            cfgs = [to_cfg(kw) for kw, _ in group]
+            rows = sweep_workload(specs, cfgs, policy, backend=backend)
+            for s, cfg in zip(group, cfgs):
+                seen[_key(s)] = sum(row[cfg.name].cycles for row in rows)
+        return [seen[_key(s)] for s in states]
+
+    def _key(state):
+        kw, policy = state
+        return (tuple(sorted(kw.items())), policy)
+
+    start_cfg = get_design("RASA-DMDB-WLS")
+    start = ({f.name: getattr(start_cfg, f.name)
+              for f in dataclasses.fields(start_cfg) if f.name != "name"},
+             ALG1_POLICY)
+    cur, (cur_cost,) = start, evaluate([start])
+    path = [{"step": 0, "engine": dict(cur[0]),
+             "policy": dataclasses.asdict(cur[1]), "cycles": cur_cost}]
+    t0 = time.time()
+    probes = 1
+    for step in range(1, steps + 1):
+        neigh = _engine_candidates(cur)
+        probes += sum(1 for s in neigh if _key(s) not in seen)
+        costs = evaluate(neigh)
+        best_i = min(range(len(neigh)), key=lambda i: costs[i])
+        if costs[best_i] >= cur_cost:
+            break
+        cur, cur_cost = neigh[best_i], costs[best_i]
+        path.append({"step": step, "engine": dict(cur[0]),
+                     "policy": dataclasses.asdict(cur[1]),
+                     "cycles": cur_cost})
+    elapsed = time.time() - t0
+
+    # named baselines (exercises the EngineConfig-keyed _simulate_cached)
+    baselines = {}
+    for name in DESIGNS:
+        cfg = get_design(name)
+        baselines[name] = sum(
+            _simulate_cached(s, cfg, ALG1_POLICY, backend).cycles
+            for s in specs)
+    out = {"workload": workload, "specs": [s.name for s in specs],
+           "backend": backend, "probes": probes, "elapsed_s": elapsed,
+           "path": path, "best_cycles": cur_cost,
+           "named_baselines": baselines,
+           "speedup_vs_best_named": min(baselines.values()) / cur_cost}
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"design_search__{workload}.json").write_text(
+        json.dumps(out, indent=2))
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True)
+    ap.add_argument("--design-search", action="store_true",
+                    help="hillclimb the RASA engine design space instead of "
+                         "the model-config roofline")
+    ap.add_argument("--workload", default="bert",
+                    choices=sorted(SEARCH_WORKLOADS))
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--backend", default="fast",
+                    choices=("reference", "fast", "numpy", "jax"))
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
     ap.add_argument("--variant", action="append", default=[])
     ap.add_argument("--skip-full", action="store_true",
                     help="skip the full-depth compile (terms only)")
     args = ap.parse_args()
+
+    if args.design_search:
+        r = design_search(args.workload, args.steps, args.backend)
+        base = min(r["named_baselines"].items(), key=lambda kv: kv[1])
+        print(f"design search [{args.workload}] {r['probes']} probes in "
+              f"{r['elapsed_s']:.1f}s ({len(r['path']) - 1} accepted moves)")
+        for p in r["path"]:
+            e = p["engine"]
+            print(f"  step {p['step']:>2}  {p['cycles']:>12.0f} cyc  "
+                  f"{e['rows']}x{e['cols']}x{e['macs_per_pe']} "
+                  f"pipe={e['pipe']} wlbp={e['wlbp']} wls={e['wls']} "
+                  f"lat={e['load_latency']} ports={e['load_ports']} "
+                  f"policy={p['policy']['mc']}x{p['policy']['nc']}")
+        print(f"best {r['best_cycles']:.0f} cyc vs best named "
+              f"{base[0]} {base[1]:.0f} cyc "
+              f"({r['speedup_vs_best_named']:.2f}x)")
+        return
+
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape are required without --design-search")
     for v in (args.variant or ["baseline"]):
         r = measure(args.arch, args.shape, v, full=not args.skip_full)
         rf = r["roofline"]

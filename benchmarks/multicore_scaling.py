@@ -32,16 +32,18 @@ import sys
 sys.path.insert(0, "src")
 
 import repro.core.designs
+import repro.core.fastsim
 import repro.core.isa
 import repro.core.simulator
 import repro.core.tiling
 import repro.core.timing
+import repro.core.trace
 import repro.core.workloads
 import repro.multicore.chip
 import repro.multicore.partition
 import repro.multicore.scheduler
 from repro.core import TABLE_I, GemmSpec
-from repro.multicore import ChipConfig, simulate_chip
+from repro.multicore import CHIP_BACKENDS, ChipConfig, simulate_chip
 
 from common import cache_json, emit, model_fingerprint  # type: ignore
 
@@ -63,6 +65,7 @@ def _fingerprint() -> str:
         repro.multicore.chip, repro.multicore.partition,
         repro.multicore.scheduler, repro.core.timing, repro.core.tiling,
         repro.core.designs, repro.core.isa, repro.core.simulator,
+        repro.core.trace, repro.core.fastsim,
         repro.core.workloads, __file__)
 
 
@@ -77,14 +80,15 @@ def _rle(values) -> list[list]:
     return out
 
 
-def run(force: bool = False) -> dict:
+def run(force: bool = False, backend: str = "fast") -> dict:
     def compute():
         table: dict = {"partition": {}, "scheduler": {}, "arbitration": {}}
         for design in DESIGNS:
             for part in PARTITIONERS:
                 for n in CORES:
                     rep = simulate_chip(
-                        SPEC, ChipConfig(n_cores=n, design=design),
+                        SPEC, ChipConfig(n_cores=n, design=design,
+                                         backend=backend),
                         partition=part)
                     table["partition"][f"{design}_{part}_c{n}"] = {
                         "cycles": rep.cycles,
@@ -96,7 +100,8 @@ def run(force: bool = False) -> dict:
                     }
         for sched in SCHEDULERS:
             rep = simulate_chip(SCHED_WORKLOAD,
-                                ChipConfig(n_cores=4, design="RASA-WLBP"),
+                                ChipConfig(n_cores=4, design="RASA-WLBP",
+                                           backend=backend),
                                 scheduler=sched)
             table["scheduler"][sched] = {
                 "cycles": rep.cycles, "speedup": rep.speedup,
@@ -106,7 +111,8 @@ def run(force: bool = False) -> dict:
             rep = simulate_chip(
                 SCHED_WORKLOAD,
                 ChipConfig(n_cores=4, design="RASA-WLBP",
-                           bw_bytes_per_cycle=ARB_BW, arbitration=arb),
+                           bw_bytes_per_cycle=ARB_BW, arbitration=arb,
+                           backend=backend),
                 scheduler="lpt")
             table["arbitration"][arb] = {
                 "cycles": rep.cycles,
@@ -120,8 +126,11 @@ def run(force: bool = False) -> dict:
         dyn = table["arbitration"]["epoch"]["cycles"]
         table["arbitration"]["static_overestimate"] = sta / dyn - 1.0
         return table
-    return cache_json("multicore_scaling", compute, force=force,
-                      fingerprint=_fingerprint())
+    # non-default backends get their own cache file: an oracle re-run must
+    # never be served from the fast backend's cache (and vice versa)
+    key = "multicore_scaling" if backend == "fast" \
+        else f"multicore_scaling_{backend}"
+    return cache_json(key, compute, force=force, fingerprint=_fingerprint())
 
 
 def main(argv=None) -> None:
@@ -129,8 +138,11 @@ def main(argv=None) -> None:
     ap.add_argument("--force", action="store_true",
                     help="recompute even if a fingerprint-matching cache "
                          "file exists")
+    ap.add_argument("--backend", default="fast", choices=CHIP_BACKENDS,
+                    help="simulation backend (results are backend-"
+                         "independent; 'reference' is the exactness oracle)")
     args = ap.parse_args(argv)
-    table = run(force=args.force)
+    table = run(force=args.force, backend=args.backend)
     print(f"# {SPEC.name} ({SPEC.M}x{SPEC.K}x{SPEC.N}), 256 B/cyc shared budget")
     print(f"{'design':<16}{'partition':<10}{'cores':>6}{'cycles':>12}"
           f"{'eff':>8}{'stall':>8}")

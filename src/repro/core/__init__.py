@@ -7,26 +7,34 @@
 - :mod:`repro.core.engine`    -- functional (numerics) execution
 - :mod:`repro.core.workloads` -- Table I layer set
 - :mod:`repro.core.area`      -- area/power/energy model (published constants)
-- :mod:`repro.core.simulator` -- evaluation driver
+- :mod:`repro.core.trace`     -- SoA trace compilation (cached lowering)
+- :mod:`repro.core.fastsim`   -- numpy/jax scan backends over compiled traces
+- :mod:`repro.core.simulator` -- evaluation driver (backend dispatch)
 """
 
 from .designs import DESIGNS, EngineConfig, get_design
+from .fastsim import StreamModelParams
 from .isa import (NUM_TREGS, TILE_K, TILE_M, TILE_N, Instr, Op,
                   TileRegisterFile, count_ops, tile_bytes, validate_stream)
-from .simulator import SimReport, normalized_runtime, simulate, sweep_designs
+from .simulator import (BACKENDS, SimReport, normalized_runtime, simulate,
+                        sweep_designs, sweep_workload)
 from .tiling import (ALG1_POLICY, MAX_REUSE_POLICY, GemmSpec, RegPolicy,
-                     lower_gemm, stream_stats)
+                     lower_gemm, lowered_stream, stream_stats)
 from .timing import (LoadStreamModel, PipelineSimulator, TimingResult,
                      serial_mm_latency, steady_state_interval)
+from .trace import CompiledTrace, compile_stream, compiled_trace, gemm_trace
 from .workloads import TABLE_I, batch_sweep
 
 __all__ = [
     "DESIGNS", "EngineConfig", "get_design",
     "NUM_TREGS", "TILE_K", "TILE_M", "TILE_N", "Instr", "Op",
     "TileRegisterFile", "count_ops", "tile_bytes", "validate_stream",
-    "SimReport", "normalized_runtime", "simulate", "sweep_designs",
+    "BACKENDS", "SimReport", "normalized_runtime", "simulate",
+    "sweep_designs", "sweep_workload",
     "ALG1_POLICY", "MAX_REUSE_POLICY", "GemmSpec", "RegPolicy",
-    "lower_gemm", "stream_stats",
+    "lower_gemm", "lowered_stream", "stream_stats",
     "LoadStreamModel", "PipelineSimulator", "TimingResult",
-    "serial_mm_latency", "steady_state_interval", "TABLE_I", "batch_sweep",
+    "serial_mm_latency", "steady_state_interval",
+    "CompiledTrace", "StreamModelParams", "compile_stream", "compiled_trace",
+    "gemm_trace", "TABLE_I", "batch_sweep",
 ]

@@ -22,6 +22,7 @@ out of every mc (WLBP hit rate = (mc-1)/mc within a k-step).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Iterator
 
@@ -187,6 +188,34 @@ def lower_gemm(spec: GemmSpec, policy: RegPolicy = ALG1_POLICY,
                                 addr=("C", m0 + mi, n0 + ni),
                                 tm=dim(m0 + mi, mt, spec.M, tile_m),
                                 tn=dim(n0 + ni, nt, spec.N, tile_n))
+
+
+#: streams whose rasa_mm count exceeds this are not memoized -- a cached
+#: million-``Instr`` list would pin hundreds of MB for a stream that is
+#: cheaper to regenerate (the compact SoA form in ``repro.core.trace`` has
+#: its own, much denser cache).
+_STREAM_CACHE_MAX_MM = 150_000
+
+
+@functools.lru_cache(maxsize=256)
+def _lowered_stream_cached(spec: GemmSpec,
+                           policy: RegPolicy) -> tuple[Instr, ...]:
+    return tuple(lower_gemm(spec, policy))
+
+
+def lowered_stream(spec: GemmSpec,
+                   policy: RegPolicy = ALG1_POLICY) -> tuple[Instr, ...]:
+    """Memoized :func:`lower_gemm`: one lowering per ``(spec, policy)``.
+
+    Design sweeps, scheduler cost probes and arbiter relaxation rounds all
+    re-simulate the same stream; lowering it once per key removes the
+    biggest constant factor from those loops.  Very large streams (see
+    ``_STREAM_CACHE_MAX_MM``) are regenerated instead of cached.
+    """
+    mt, kt, nt = spec.tiles()
+    if mt * kt * nt > _STREAM_CACHE_MAX_MM:
+        return tuple(lower_gemm(spec, policy))
+    return _lowered_stream_cached(spec, policy)
 
 
 def stream_stats(spec: GemmSpec, policy: RegPolicy = ALG1_POLICY) -> dict:

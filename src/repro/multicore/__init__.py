@@ -47,15 +47,16 @@ Entry point: :func:`simulate_chip` -- pass one ``GemmSpec`` (partitioned) or
 a list of them (scheduled).
 """
 
-from .chip import (ARBITRATIONS, ArbiterTrace, ChipConfig, ChipReport,
-                   CoreCluster, EpochBandwidthLoadModel,
+from .chip import (ARBITRATIONS, CHIP_BACKENDS, ArbiterTrace, ChipConfig,
+                   ChipReport, CoreCluster, EpochBandwidthLoadModel,
                    SharedBandwidthLoadModel, partitioned_chip_report,
                    simulate_chip)
 from .partition import PARTITIONERS, partition_gemm, split_ways
 from .scheduler import SCHEDULERS, assign, scheduled_chip_report
 
 __all__ = [
-    "ARBITRATIONS", "ArbiterTrace", "ChipConfig", "ChipReport", "CoreCluster",
+    "ARBITRATIONS", "CHIP_BACKENDS", "ArbiterTrace", "ChipConfig",
+    "ChipReport", "CoreCluster",
     "EpochBandwidthLoadModel", "SharedBandwidthLoadModel",
     "partitioned_chip_report", "simulate_chip",
     "PARTITIONERS", "partition_gemm", "split_ways",

@@ -38,12 +38,19 @@ import math
 from typing import Sequence
 
 from ..core.designs import EngineConfig, get_design
+from ..core.fastsim import StreamModelParams, run_cores
 from ..core.isa import Instr, Op
-from ..core.tiling import ALG1_POLICY, GemmSpec, RegPolicy, lower_gemm
+from ..core.tiling import (ALG1_POLICY, GemmSpec, RegPolicy, lowered_stream)
 from ..core.timing import LoadStreamModel, PipelineSimulator, TimingResult
+from ..core.trace import CompiledTrace, compile_stream, compiled_trace
 from .partition import partition_gemm
 
 ARBITRATIONS = ("epoch", "static")
+
+#: chip-level simulation backends: the reference Python loop, or the
+#: trace-compiled fast backends of :mod:`repro.core.fastsim` ("fast" picks
+#: jax when available and worthwhile, numpy otherwise).
+CHIP_BACKENDS = ("reference", "fast", "numpy", "jax")
 
 #: relaxation-round cap for the epoch arbiter; the monotone iteration
 #: converges in a handful of rounds, this only guards pathological streams.
@@ -208,6 +215,11 @@ class ArbiterTrace:
     n_active: tuple[int, ...]
     #: relaxation rounds until the activity horizons converged
     rounds: int
+    #: per relaxation round, how many cores were *not* re-simulated because
+    #: the share schedule they can observe (their prefix of ``shares`` plus
+    #: their tail) was unchanged since their last simulation -- results are
+    #: deterministic in the visible schedule, so those rounds are skipped.
+    skipped: tuple[int, ...] = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -234,10 +246,16 @@ class ChipConfig:
     arbitration: str = "epoch"
     epoch_cycles: float = 1024.0
     store_bytes_shared: bool = True
+    #: simulation backend (see :data:`CHIP_BACKENDS`); "reference" keeps the
+    #: per-core Python loop as the exactness oracle.
+    backend: str = "fast"
 
     def __post_init__(self):
         if self.n_cores < 1:
             raise ValueError("need at least one core")
+        if self.backend not in CHIP_BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; "
+                             f"available: {CHIP_BACKENDS}")
         if not self.bw_bytes_per_cycle > 0:
             raise ValueError("bw_bytes_per_cycle must be > 0 (use math.inf "
                              "for a contention-free chip)")
@@ -291,6 +309,9 @@ class ChipReport:
     active_trace: tuple[int, ...] = ()
     #: relaxation rounds the epoch arbiter needed (1 for static)
     arb_rounds: int = 1
+    #: per relaxation round, cores skipped because their visible share
+    #: schedule was unchanged (see :class:`ArbiterTrace`)
+    arb_skipped: tuple[int, ...] = ()
 
     @property
     def speedup(self) -> float:
@@ -337,7 +358,8 @@ class CoreCluster:
     def __init__(self, chip: ChipConfig):
         self.chip = chip
 
-    def run_streams(self, streams: Sequence[Sequence[Instr]]
+    def run_streams(self, streams: Sequence[Sequence[Instr]] | None,
+                    traces: Sequence[CompiledTrace] | None = None
                     ) -> tuple[list[TimingResult], list[float],
                                ArbiterTrace | None]:
         """Simulate every core's stream under the chip's arbitration model.
@@ -348,46 +370,118 @@ class CoreCluster:
         unthrottled runtime -- 0 whenever the budget does not bind) and
         ``trace`` is the per-epoch :class:`ArbiterTrace` (None only when
         there is nothing to arbitrate).
+
+        With a fast backend, ``traces`` (the compiled form) may be passed
+        instead of / alongside ``streams``; entry points pass the cached
+        traces so the per-round simulations never re-lower anything.
         """
+        if self.chip.backend == "reference":
+            if streams is None:
+                raise ValueError("backend='reference' needs instruction "
+                                 "streams")
+            traces = None
+        elif traces is None:
+            if streams is None:
+                raise ValueError("need streams or compiled traces")
+            traces = [compile_stream(s) for s in streams]
         if self.chip.arbitration == "static":
-            return self._run_static(streams)
-        return self._run_epoch(streams)
+            return self._run_static(streams, traces)
+        return self._run_epoch(streams, traces)
 
     # -- shared helpers ----------------------------------------------------
-    def _demands_bandwidth(self, stream: Sequence[Instr]) -> bool:
-        """Does this stream put any traffic on the shared memory system?"""
+    def _params(self, shares: Sequence[float] = (),
+                epoch_cycles: float = math.inf,
+                tail: float = math.inf) -> StreamModelParams:
+        chip = self.chip
+        return StreamModelParams(
+            chip.engine.load_ports, chip.store_ports, tuple(shares),
+            epoch_cycles, tail, chip.bw_burst_bytes,
+            chip.store_bytes_shared)
+
+    def _sim_round(self, streams, traces,
+                   params: Sequence[StreamModelParams]
+                   ) -> list[tuple[TimingResult, float]]:
+        """Simulate the given cores under their arbiter parameters,
+        returning ``(TimingResult, last_grant)`` per core.
+
+        Cores that share a compiled trace *and* identical arbiter
+        parameters (symmetric shards under equal shares) are simulated
+        once and fan the result out -- results are deterministic in
+        (trace, params).
+        """
+        cfg = self.chip.engine
+        if self.chip.backend == "reference":
+            out = []
+            for stream, p in zip(streams, params):
+                model = p.make_model()
+                res = PipelineSimulator(cfg, load_model=model).run(stream)
+                out.append((res, model.last_grant))
+            return out
+        slot: dict[tuple, int] = {}
+        todo_t, todo_p = [], []
+        lanes = []
+        for t, p in zip(traces, params):
+            key = (id(t), p)
+            if key not in slot:
+                slot[key] = len(todo_t)
+                todo_t.append(t)
+                todo_p.append(p)
+            lanes.append(slot[key])
+        uniq = run_cores(todo_t, cfg, todo_p, backend=self.chip.backend)
+        return [uniq[k] for k in lanes]
+
+    def _demands_bandwidth(self, stream: Sequence[Instr] | None,
+                           trace: CompiledTrace | None = None) -> bool:
+        """Does this core put any traffic on the shared memory system?"""
         charge_stores = self.chip.store_bytes_shared
+        if trace is not None:
+            return trace.n_tl > 0 or (charge_stores and trace.n_ts > 0)
         return any(ins.op is Op.TL or (charge_stores and ins.op is Op.TS)
                    for ins in stream)
 
-    def _contention_stall(self, stream: Sequence[Instr],
-                          res: TimingResult) -> float:
-        """End-to-end cycles this core lost to the bandwidth throttle."""
-        if res.load_stall_cycles == 0.0:
-            # the arbiter never delayed an access: the run is identical to
-            # an unthrottled one, so skip the reference re-simulation.
-            return 0.0
+    def _demand_vector(self, streams, traces) -> list[bool]:
+        n = len(traces if traces is not None else streams)
+        return [self._demands_bandwidth(streams[i] if streams else None,
+                                        traces[i] if traces else None)
+                for i in range(n)]
+
+    def _contention_stalls(self, streams, traces,
+                           results: Sequence[TimingResult]) -> list[float]:
+        """End-to-end cycles each core lost to the bandwidth throttle.
+
+        Cores whose arbiter never delayed an access ran identically to an
+        unthrottled core, so only the stalled subset is re-simulated --
+        batched through the fast backend when one is selected.
+        """
+        stalls = [0.0] * len(results)
+        idxs = [i for i, r in enumerate(results)
+                if r.load_stall_cycles != 0.0]
+        if not idxs:
+            return stalls
         cfg = self.chip.engine
-        free_model = LoadStreamModel(cfg.load_ports, self.chip.store_ports)
-        free = PipelineSimulator(cfg, load_model=free_model).run(stream)
-        return max(0.0, res.cycles - free.cycles)
+        free = StreamModelParams(cfg.load_ports, self.chip.store_ports)
+        if self.chip.backend == "reference":
+            for i in idxs:
+                model = free.make_model()
+                res = PipelineSimulator(cfg, load_model=model) \
+                    .run(streams[i])
+                stalls[i] = max(0.0, results[i].cycles - res.cycles)
+            return stalls
+        outs = self._sim_round(None, [traces[i] for i in idxs],
+                               [free] * len(idxs))
+        for i, (res, _) in zip(idxs, outs):
+            stalls[i] = max(0.0, results[i].cycles - res.cycles)
+        return stalls
 
     # -- static equal shares (PR-1 baseline) -------------------------------
-    def _run_static(self, streams: Sequence[Sequence[Instr]]):
+    def _run_static(self, streams, traces):
         chip = self.chip
-        cfg = chip.engine
-        demand = [self._demands_bandwidth(s) for s in streams]
+        demand = self._demand_vector(streams, traces)
         n_active = sum(demand) or 1
         share = chip.bw_bytes_per_cycle / n_active
-        results, stalls = [], []
-        for stream in streams:
-            model = SharedBandwidthLoadModel(
-                cfg.load_ports, share, chip.bw_burst_bytes,
-                store_ports=chip.store_ports,
-                charge_store_bytes=chip.store_bytes_shared)
-            res = PipelineSimulator(cfg, load_model=model).run(stream)
-            results.append(res)
-            stalls.append(self._contention_stall(stream, res))
+        params = [self._params(tail=share)] * len(demand)
+        results = [r for r, _ in self._sim_round(streams, traces, params)]
+        stalls = self._contention_stalls(streams, traces, results)
         trace = ArbiterTrace(epoch_cycles=0.0, shares=(share,),
                              n_active=(n_active,), rounds=1)
         return results, stalls, trace
@@ -412,44 +506,69 @@ class CoreCluster:
             n_active.append(n)
         return shares, n_active
 
-    def _run_epoch(self, streams: Sequence[Sequence[Instr]]):
+    def _run_epoch(self, streams, traces):
         chip = self.chip
-        cfg = chip.engine
         E = chip.epoch_cycles
         budget = chip.bw_bytes_per_cycle
-        demand = [self._demands_bandwidth(s) for s in streams]
+        demand = self._demand_vector(streams, traces)
+        n = len(demand)
 
         # Opening round: every demanding core is assumed active forever,
         # which makes the schedule the static equal-share model.  Each
-        # round re-simulates all cores under the current schedule, reads
-        # off when each core's last access was granted, and shrinks the
+        # round simulates the cores under the current schedule, reads off
+        # when each core's last access was granted, and shrinks the
         # activity horizons accordingly; shrinking horizons only ever
         # *raise* later epochs' shares, so finish times -- and with them
         # the horizons -- decrease monotonically until the fixed point.
+        #
+        # A core only observes ``shares[:end_epoch[i]]`` plus its tail
+        # (monotonicity keeps its grants inside that prefix), and results
+        # are deterministic in that visible schedule -- so a core whose
+        # visible schedule did not change since it was last simulated is
+        # skipped, its cached result reused (counted in ``skipped``).
         end_epoch: list[int | None] = [None if d else 0 for d in demand]
         n_forever = sum(1 for e in end_epoch if e is None)
         tail = budget / n_forever if n_forever else budget
 
-        results: list[TimingResult] = []
+        cached: list[tuple[TimingResult, float] | None] = [None] * n
+        last_vis: list[tuple | None] = [None] * n
+        skipped: list[int] = []
         rounds = 0
         shares: list[float] = []
         n_active: list[int] = []
+        # the reference backend is the literal oracle: it re-simulates every
+        # core every round, so the skip logic can be validated against it
+        oracle = self.chip.backend == "reference"
         for rounds in range(1, MAX_ARBITER_ROUNDS + 1):
             shares, n_active = self._build_schedule(end_epoch)
-            results, new_end = [], []
-            for i, stream in enumerate(streams):
-                model = EpochBandwidthLoadModel(
-                    cfg.load_ports, shares, E,
-                    tail_share=tail if end_epoch[i] is None else budget,
-                    burst_bytes=chip.bw_burst_bytes,
-                    store_ports=chip.store_ports,
-                    charge_store_bytes=chip.store_bytes_shared)
-                results.append(PipelineSimulator(cfg, load_model=model)
-                               .run(stream))
+            need: list[tuple[int, float]] = []
+            for i in range(n):
+                h = end_epoch[i]
+                vis = (tuple(shares) if h is None else tuple(shares[:h]),
+                       tail if h is None else budget)
+                # a core the arbiter never delayed runs identically under
+                # any pointwise-larger schedule -- its result is final
+                unthrottled = (cached[i] is not None
+                               and cached[i][0].load_stall_cycles == 0.0)
+                if oracle or cached[i] is None or (last_vis[i] != vis
+                                                   and not unthrottled):
+                    need.append((i, vis[1]))
+                    last_vis[i] = vis
+            skipped.append(n - len(need))
+            if need:
+                params = [self._params(shares, E, tail_i)
+                          for _, tail_i in need]
+                sub_s = [streams[i] for i, _ in need] if streams else None
+                sub_t = [traces[i] for i, _ in need] if traces else None
+                for (i, _), ro in zip(need,
+                                      self._sim_round(sub_s, sub_t, params)):
+                    cached[i] = ro
+            new_end: list[int | None] = []
+            for i in range(n):
                 if not demand[i]:
                     new_end.append(0)
                 else:
-                    e = int(model.last_grant // E) + 1
+                    e = int(cached[i][1] // E) + 1      # type: ignore[index]
                     prev = end_epoch[i]
                     new_end.append(e if prev is None else min(prev, e))
             if new_end == end_epoch:
@@ -457,18 +576,37 @@ class CoreCluster:
             end_epoch = new_end
             tail = budget     # all horizons finite from round 2 on
 
-        stalls = [self._contention_stall(s, r)
-                  for s, r in zip(streams, results)]
+        results = [c[0] for c in cached]                # type: ignore[index]
+        stalls = self._contention_stalls(streams, traces, results)
         trace = ArbiterTrace(epoch_cycles=E, shares=tuple(shares),
-                             n_active=tuple(n_active), rounds=rounds)
+                             n_active=tuple(n_active), rounds=rounds,
+                             skipped=tuple(skipped))
         return results, stalls, trace
 
 
 def _lower_many(specs: Sequence[GemmSpec], policy: RegPolicy) -> list[Instr]:
     stream: list[Instr] = []
     for spec in specs:
-        stream.extend(lower_gemm(spec, policy))
+        stream.extend(lowered_stream(spec, policy))
     return stream
+
+
+def _streams_traces(chip: ChipConfig, shards: Sequence[Sequence[GemmSpec]]):
+    """Per-core simulator inputs: instruction streams for the reference
+    backend, cached compiled traces for the fast backends (which then never
+    materialize ``Instr`` lists at all).
+
+    Trace cache keys drop the spec names: lowering depends only on the
+    dims, so the equal-dim shards a symmetric partitioner emits ("x@c0",
+    "x@c1", ...) share one compiled trace -- and, downstream, one
+    simulation per arbiter round (see ``CoreCluster._sim_round``).
+    """
+    if chip.backend == "reference":
+        return [_lower_many(shard, chip.policy) for shard in shards], None
+    return None, [
+        compiled_trace(tuple(dataclasses.replace(s, name="")
+                             for s in shard), chip.policy)
+        for shard in shards]
 
 
 def _aggregate(chip: ChipConfig, workload_name: str, strategy: str,
@@ -500,6 +638,7 @@ def _aggregate(chip: ChipConfig, workload_name: str, strategy: str,
         share_trace=trace.shares if trace else (),
         active_trace=trace.n_active if trace else (),
         arb_rounds=trace.rounds if trace else 1,
+        arb_skipped=trace.skipped if trace else (),
     )
 
 
@@ -507,12 +646,17 @@ def _aggregate(chip: ChipConfig, workload_name: str, strategy: str,
 def _single_core_cycles_cached(chip: ChipConfig,
                                specs: tuple[GemmSpec, ...]) -> float:
     cfg = chip.engine
-    model = SharedBandwidthLoadModel(cfg.load_ports, chip.bw_bytes_per_cycle,
-                                     chip.bw_burst_bytes,
-                                     store_ports=chip.store_ports,
-                                     charge_store_bytes=chip.store_bytes_shared)
-    sim = PipelineSimulator(cfg, load_model=model)
-    return sim.run(_lower_many(specs, chip.policy)).cycles
+    params = StreamModelParams(
+        cfg.load_ports, chip.store_ports, (), math.inf,
+        chip.bw_bytes_per_cycle, chip.bw_burst_bytes,
+        chip.store_bytes_shared)
+    if chip.backend == "reference":
+        sim = PipelineSimulator(cfg, load_model=params.make_model())
+        return sim.run(_lower_many(specs, chip.policy)).cycles
+    trace = compiled_trace(tuple(dataclasses.replace(s, name="")
+                                 for s in specs), chip.policy)
+    return run_cores([trace], cfg, [params],
+                     backend=chip.backend)[0][0].cycles
 
 
 def _single_core_cycles(chip: ChipConfig, specs: Sequence[GemmSpec]) -> float:
@@ -525,8 +669,8 @@ def partitioned_chip_report(spec: GemmSpec, chip: ChipConfig,
                             strategy: str = "m_split") -> ChipReport:
     """Shard one GEMM across the chip's cores and report scaling."""
     shards = partition_gemm(spec, chip.n_cores, strategy)
-    streams = [_lower_many(shard, chip.policy) for shard in shards]
-    results, stalls, trace = CoreCluster(chip).run_streams(streams)
+    streams, traces = _streams_traces(chip, shards)
+    results, stalls, trace = CoreCluster(chip).run_streams(streams, traces)
     return _aggregate(chip, spec.name, strategy, shards, results, stalls,
                       _single_core_cycles(chip, [spec]), trace)
 

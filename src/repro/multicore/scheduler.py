@@ -38,7 +38,7 @@ import dataclasses
 from ..core.simulator import _simulate_cached
 from ..core.tiling import GemmSpec
 from .chip import (ChipConfig, ChipReport, CoreCluster, _aggregate,
-                   _lower_many, _single_core_cycles)
+                   _single_core_cycles, _streams_traces)
 from .partition import split_ways
 
 SCHEDULERS = ("round_robin", "work_queue", "lpt", "gang")
@@ -48,8 +48,12 @@ def _estimate_cycles(spec: GemmSpec, chip: ChipConfig) -> float:
     # cost depends only on the dims, but the lru_cache key includes the
     # name -- canonicalize it so equal-dim shards ("x@c0", "x@c1", ...)
     # and repeated layers hit one cache entry instead of re-simulating.
+    # Estimates run on the chip's backend: results are backend-independent
+    # (see docs/performance.md), so gang's many split_ways probes get the
+    # fast path too.
     spec = dataclasses.replace(spec, name="")
-    return _simulate_cached(spec, chip.engine.name, chip.policy).cycles
+    return _simulate_cached(spec, chip.engine.name, chip.policy,
+                            chip.backend).cycles
 
 
 def assign_round_robin(specs: list[GemmSpec], n_cores: int) -> list[list[GemmSpec]]:
@@ -150,8 +154,8 @@ def scheduled_chip_report(specs: list[GemmSpec], chip: ChipConfig,
     if not specs:
         raise ValueError("empty workload")
     shards = assign(specs, chip, scheduler, partition)
-    streams = [_lower_many(shard, chip.policy) for shard in shards]
-    results, stalls, trace = CoreCluster(chip).run_streams(streams)
+    streams, traces = _streams_traces(chip, shards)
+    results, stalls, trace = CoreCluster(chip).run_streams(streams, traces)
     name = f"{specs[0].name}+{len(specs) - 1}" if len(specs) > 1 else specs[0].name
     return _aggregate(chip, name, scheduler, shards, results, stalls,
                       _single_core_cycles(chip, specs), trace)
