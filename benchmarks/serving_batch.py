@@ -1,0 +1,110 @@
+"""Contention-aware serving batcher: latency/makespan vs. offered load.
+
+Drives synthetic serving-request traces (prefill GEMM + decode micro-GEMMs
+per request) through the online chip model under the three admission
+policies of ``repro.serving.simbatch`` -- the blind fixed-batch baseline,
+bandwidth-threshold admission, and the occupancy-aware policy -- across a
+sweep of offered loads (mean inter-arrival gap in scheduling epochs), plus
+the canonical skewed 4-core acceptance scenario.  Reported per cell: p50 /
+p99 request latency (cycles), makespan, and MACs/cycle throughput, all on
+the fast simulation backend (results are backend-independent; the parity
+suite pins reference == fast).
+
+Results go to ``benchmarks/results/BENCH_serving_batch.json`` -- uploaded
+by CI next to the other benchmark artifacts.
+
+    PYTHONPATH=src python benchmarks/serving_batch.py [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.multicore import ChipConfig
+from repro.serving.simbatch import (POLICIES, run_batcher, skewed_trace,
+                                    synthetic_trace)
+
+from common import RESULTS, emit  # type: ignore
+
+#: offered-load sweep: mean inter-arrival gap in epochs (small = heavy)
+LOADS = (1, 4, 16)
+SMOKE_LOADS = (2, 8)
+BW = 64.0           # binding enough on 4 RASA-WLBP cores that policy matters
+
+
+def _cell(rep) -> dict:
+    return {
+        "makespan": rep.makespan,
+        "p50_latency": rep.p50_latency,
+        "p99_latency": rep.p99_latency,
+        "mean_latency": rep.mean_latency,
+        "throughput_macs_per_cycle": rep.throughput_macs_per_cycle,
+        "admit_epochs": list(rep.admit_epochs),
+    }
+
+
+def run(smoke: bool = False) -> dict:
+    n_req, d_model = (8, 256) if smoke else (16, 512)
+    chip = ChipConfig(n_cores=4, design="RASA-WLBP",
+                      bw_bytes_per_cycle=BW, backend="fast")
+    table: dict = {"smoke": smoke, "chip": {
+        "n_cores": chip.n_cores, "design": chip.design,
+        "bw_bytes_per_cycle": chip.bw_bytes_per_cycle,
+        "epoch_cycles": chip.epoch_cycles}, "load_sweep": {}, "skewed": {}}
+
+    for gap in (SMOKE_LOADS if smoke else LOADS):
+        trace = synthetic_trace(n_req, seed=0, mean_gap=gap,
+                                d_model=d_model)
+        for policy in POLICIES:
+            rep = run_batcher(trace, chip, policy=policy)
+            table["load_sweep"][f"gap{gap}_{policy}"] = _cell(rep)
+
+    skew = skewed_trace(d_model=256, heavy_prompt=256, n_light=6) if smoke \
+        else skewed_trace()
+    for policy in POLICIES:
+        rep = run_batcher(skew, chip, policy=policy)
+        table["skewed"][policy] = _cell(rep)
+    fixed = table["skewed"]["fixed"]["makespan"]
+    occ = table["skewed"]["occupancy"]["makespan"]
+    table["skewed"]["occupancy_vs_fixed_makespan"] = occ / fixed
+    assert occ < fixed, "occupancy-aware admission must beat fixed-batch " \
+                        "on the skewed trace"
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / "BENCH_serving_batch.json").write_text(
+        json.dumps(table, indent=2))
+    return table
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="smaller trace (CI smoke run)")
+    args = ap.parse_args(argv)
+    t = run(smoke=args.smoke)
+    print(f"# offered-load sweep (4 cores, RASA-WLBP, {BW:.0f} B/cyc)")
+    print(f"{'cell':<22}{'makespan':>12}{'p50':>12}{'p99':>12}")
+    for key, v in t["load_sweep"].items():
+        print(f"{key:<22}{v['makespan']:>12.0f}{v['p50_latency']:>12.0f}"
+              f"{v['p99_latency']:>12.0f}")
+        emit(f"serving_{key}", 0.0,
+             f"makespan={v['makespan']:.0f};p99={v['p99_latency']:.0f}")
+    print("\n# skewed acceptance scenario")
+    for policy in POLICIES:
+        v = t["skewed"][policy]
+        print(f"{policy:<12} makespan={v['makespan']:>12.0f} "
+              f"p50={v['p50_latency']:>10.0f} p99={v['p99_latency']:>10.0f}")
+        emit(f"serving_skewed_{policy}", 0.0,
+             f"makespan={v['makespan']:.0f}")
+    ratio = t["skewed"]["occupancy_vs_fixed_makespan"]
+    print(f"occupancy-aware makespan = {ratio:.3f}x fixed-batch "
+          f"(lower is better; <1 required)")
+
+
+if __name__ == "__main__":
+    main()

@@ -286,6 +286,56 @@ def run_trace_numpy(trace: CompiledTrace, cfg: EngineConfig,
     return res
 
 
+@dataclasses.dataclass(frozen=True)
+class SimCarry:
+    """Resumable snapshot of the inlined numpy recurrence.
+
+    Captures the complete per-core simulator state after the first ``i``
+    instructions of a trace: register ready-times, the previous ``rasa_mm``
+    sub-stage times, port/bucket state and the running aggregates.  The
+    future of the recurrence depends on the past *only* through this state,
+    so re-simulation may resume here instead of replaying the prefix --
+    provided the arbiter's share schedule is unchanged on
+    ``[0, self.horizon)``: every epoch the first ``i`` instructions could
+    observe lies strictly below the horizon (grant walks never look past
+    the epoch containing the granted start).
+
+    The online chip model (:mod:`repro.multicore.online`) snapshots every
+    ``SNAP_STRIDE`` instructions and, when an arrival changes the schedule
+    from epoch ``x`` on, resumes each in-flight core from its latest
+    snapshot with ``horizon <= x * epoch_cycles``.
+    """
+
+    i: int                          # instructions consumed (resume index)
+    reg_ready: tuple[float, ...]
+    p_ff_start: float
+    p_ff_end: float
+    p_fs_end: float
+    p_dr_end: float
+    have_prev: bool
+    wl_port_free: float
+    t_end: float
+    wl_skips: int
+    bw_stall: float
+    next_free: float
+    store_next: float
+    last_grant: float
+    tokens: float
+    bt: float
+
+    @property
+    def horizon(self) -> float:
+        """Latest point in time this state depends on (see class docs)."""
+        return max(self.t_end, self.bt, self.next_free, self.store_next,
+                   self.wl_port_free, self.last_grant, self.p_dr_end,
+                   max(self.reg_ready))
+
+
+#: snapshot cadence of :func:`run_segment` (instructions between carries);
+#: power of two so the per-instruction check stays a single compare.
+SNAP_STRIDE = 4096
+
+
 def _run_numpy_params(trace: CompiledTrace, cfg: EngineConfig,
                       params: StreamModelParams
                       ) -> tuple[TimingResult, float]:
@@ -296,6 +346,25 @@ def _run_numpy_params(trace: CompiledTrace, cfg: EngineConfig,
     ``EpochBandwidthLoadModel`` (bit-exact; pinned by the parity suite),
     but without the per-access method-call chain -- the dominant cost of
     bandwidth-throttled runs.  Returns ``(result, last_grant)``.
+    """
+    res, lg, _ = run_segment(trace, cfg, params)
+    return res, lg
+
+
+def run_segment(trace: CompiledTrace, cfg: EngineConfig,
+                params: StreamModelParams,
+                carry: SimCarry | None = None,
+                snap_stride: int | None = None
+                ) -> tuple[TimingResult, float, list[SimCarry]]:
+    """Resumable form of the inlined numpy loop.
+
+    With ``carry`` given, simulation resumes at instruction ``carry.i``
+    from the saved state instead of replaying the prefix -- exact whenever
+    ``params``'s share schedule agrees with the schedule the carry was
+    produced under on ``[0, carry.horizon)`` (see :class:`SimCarry`).
+    With ``snap_stride`` set, a snapshot is recorded every that many
+    instructions; the returned list is ordered by instruction index.
+    Returns ``(result, last_grant, snapshots)``.
     """
     wl = cfg.wl_cycles
     fs = cfg.fs_cycles
@@ -382,18 +451,48 @@ def _run_numpy_params(trace: CompiledTrace, cfg: EngineConfig,
     tms = trace.tm.tolist()
     reus = trace.reusable.tolist()
 
-    reg_ready = [0.0] * NUM_TREGS
-    p_ff_start = -1.0
-    p_ff_end = p_fs_end = p_dr_end = 0.0
-    have_prev = False
-    wl_port_free = 0.0
-    t_end = 0.0
-    wl_skips = 0
-    bw_stall = 0.0
-    next_free = store_next = 0.0
-    last_grant = 0.0
+    if carry is None:
+        i0 = 0
+        reg_ready = [0.0] * NUM_TREGS
+        p_ff_start = -1.0
+        p_ff_end = p_fs_end = p_dr_end = 0.0
+        have_prev = False
+        wl_port_free = 0.0
+        t_end = 0.0
+        wl_skips = 0
+        bw_stall = 0.0
+        next_free = store_next = 0.0
+        last_grant = 0.0
+    else:
+        i0 = carry.i
+        reg_ready = list(carry.reg_ready)
+        p_ff_start = carry.p_ff_start
+        p_ff_end = carry.p_ff_end
+        p_fs_end = carry.p_fs_end
+        p_dr_end = carry.p_dr_end
+        have_prev = carry.have_prev
+        wl_port_free = carry.wl_port_free
+        t_end = carry.t_end
+        wl_skips = carry.wl_skips
+        bw_stall = carry.bw_stall
+        next_free = carry.next_free
+        store_next = carry.store_next
+        last_grant = carry.last_grant
+        tokens = carry.tokens
+        bt = carry.bt
 
-    for i in range(len(op)):
+    snaps: list[SimCarry] = []
+    next_snap = len(op) + 1
+    if snap_stride is not None:
+        next_snap = (i0 // snap_stride + 1) * snap_stride
+
+    for i in range(i0, len(op)):
+        if i == next_snap:
+            snaps.append(SimCarry(
+                i, tuple(reg_ready), p_ff_start, p_ff_end, p_fs_end,
+                p_dr_end, have_prev, wl_port_free, t_end, wl_skips,
+                bw_stall, next_free, store_next, last_grant, tokens, bt))
+            next_snap += snap_stride
         o = op[i]
         t_issue = i / issue_per_cycle
 
@@ -474,7 +573,7 @@ def _run_numpy_params(trace: CompiledTrace, cfg: EngineConfig,
                                                     fs_end, dr_end)
         have_prev = True
 
-    return _result(trace, cfg, t_end, wl_skips, bw_stall), last_grant
+    return _result(trace, cfg, t_end, wl_skips, bw_stall), last_grant, snaps
 
 
 # --------------------------------------------------------------------------

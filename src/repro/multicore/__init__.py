@@ -25,7 +25,14 @@ Layers
     Inter-GEMM parallelism: static round-robin and dynamic work-queue /
     LPT placement of layer-level GEMM workloads, plus the ``gang``
     scheduler that splits a dominant GEMM across soon-idle cores
-    (combined inter+intra parallelism).
+    (combined inter+intra parallelism) and ``assign_incremental`` for
+    mid-run injection onto already-loaded cores.
+:mod:`~repro.multicore.online`
+    Open-arrival form of the chip model: segments of scheduled work
+    arrive and depart at epoch boundaries while the chip is mid-run,
+    arbitrated by the same epoch fixed point over staggered activity
+    spans (drives the serving batcher in :mod:`repro.serving.simbatch`;
+    see ``docs/serving_sim.md``).
 
 Modelling assumptions (see ``docs/multicore.md`` for details)
 -------------------------------------------------------------
@@ -49,16 +56,19 @@ a list of them (scheduled).
 
 from .chip import (ARBITRATIONS, CHIP_BACKENDS, ArbiterTrace, ChipConfig,
                    ChipReport, CoreCluster, EpochBandwidthLoadModel,
-                   SharedBandwidthLoadModel, partitioned_chip_report,
-                   simulate_chip)
+                   SharedBandwidthLoadModel, build_share_schedule,
+                   partitioned_chip_report, simulate_chip)
+from .online import OnlineChip, Segment
 from .partition import PARTITIONERS, partition_gemm, split_ways
-from .scheduler import SCHEDULERS, assign, scheduled_chip_report
+from .scheduler import (SCHEDULERS, assign, assign_incremental,
+                        scheduled_chip_report)
 
 __all__ = [
     "ARBITRATIONS", "CHIP_BACKENDS", "ArbiterTrace", "ChipConfig",
     "ChipReport", "CoreCluster",
     "EpochBandwidthLoadModel", "SharedBandwidthLoadModel",
-    "partitioned_chip_report", "simulate_chip",
+    "build_share_schedule", "partitioned_chip_report", "simulate_chip",
+    "OnlineChip", "Segment",
     "PARTITIONERS", "partition_gemm", "split_ways",
-    "SCHEDULERS", "assign", "scheduled_chip_report",
+    "SCHEDULERS", "assign", "assign_incremental", "scheduled_chip_report",
 ]

@@ -57,6 +57,49 @@ CHIP_BACKENDS = ("reference", "fast", "numpy", "jax")
 MAX_ARBITER_ROUNDS = 32
 
 
+def stream_model_params(chip: "ChipConfig", shares: Sequence[float] = (),
+                        epoch_cycles: float = math.inf,
+                        tail: float = math.inf) -> StreamModelParams:
+    """The chip's arbiter as fast-backend parameters (default: the
+    unthrottled port model).  Shared by the closed-batch cluster and the
+    online model."""
+    return StreamModelParams(
+        chip.engine.load_ports, chip.store_ports, tuple(shares),
+        epoch_cycles, tail, chip.bw_burst_bytes, chip.store_bytes_shared)
+
+
+def demands_bandwidth(chip: "ChipConfig", stream: Sequence[Instr] | None,
+                      trace: CompiledTrace | None = None) -> bool:
+    """Does this stream put any traffic on the shared memory system?"""
+    charge_stores = chip.store_bytes_shared
+    if trace is not None:
+        return trace.n_tl > 0 or (charge_stores and trace.n_ts > 0)
+    return any(ins.op is Op.TL or (charge_stores and ins.op is Op.TS)
+               for ins in stream)
+
+
+def build_share_schedule(spans: Sequence[tuple[int, int | None]],
+                         budget: float) -> tuple[list[float], list[int]]:
+    """Per-epoch ``(share, n_active)`` from activity spans ``[start, end)``.
+
+    ``spans[i]`` is the half-open epoch interval during which consumer *i*
+    draws on the shared ``budget`` (``end=None`` = active indefinitely --
+    the opening relaxation round's assumption).  Epoch *e*'s share is
+    ``budget / n_active(e)`` over the spans containing *e*; the schedule is
+    built up to the largest finite end.  The closed-batch arbiter passes
+    ``start=0`` spans; the open-arrival model
+    (:mod:`repro.multicore.online`) staggers the starts as scheduled work
+    arrives and departs at epoch boundaries.
+    """
+    horizon = max((e for _, e in spans if e is not None), default=0)
+    shares, n_active = [], []
+    for e in range(horizon):
+        n = sum(1 for s, h in spans if s <= e and (h is None or h > e))
+        shares.append(budget / n if n else budget)
+        n_active.append(n)
+    return shares, n_active
+
+
 class EpochBandwidthLoadModel(LoadStreamModel):
     """Token-bucket arbiter under a piecewise-constant share schedule.
 
@@ -392,11 +435,7 @@ class CoreCluster:
     def _params(self, shares: Sequence[float] = (),
                 epoch_cycles: float = math.inf,
                 tail: float = math.inf) -> StreamModelParams:
-        chip = self.chip
-        return StreamModelParams(
-            chip.engine.load_ports, chip.store_ports, tuple(shares),
-            epoch_cycles, tail, chip.bw_burst_bytes,
-            chip.store_bytes_shared)
+        return stream_model_params(self.chip, shares, epoch_cycles, tail)
 
     def _sim_round(self, streams, traces,
                    params: Sequence[StreamModelParams]
@@ -433,11 +472,7 @@ class CoreCluster:
     def _demands_bandwidth(self, stream: Sequence[Instr] | None,
                            trace: CompiledTrace | None = None) -> bool:
         """Does this core put any traffic on the shared memory system?"""
-        charge_stores = self.chip.store_bytes_shared
-        if trace is not None:
-            return trace.n_tl > 0 or (charge_stores and trace.n_ts > 0)
-        return any(ins.op is Op.TL or (charge_stores and ins.op is Op.TS)
-                   for ins in stream)
+        return demands_bandwidth(self.chip, stream, trace)
 
     def _demand_vector(self, streams, traces) -> list[bool]:
         n = len(traces if traces is not None else streams)
@@ -493,18 +528,11 @@ class CoreCluster:
 
         ``end_epoch[i]`` is the first epoch in which core *i* no longer
         draws on the budget (None = active indefinitely, used by the
-        opening relaxation round).
+        opening relaxation round).  Closed-batch special case of
+        :func:`build_share_schedule` -- every core starts at epoch 0.
         """
-        budget = self.chip.bw_bytes_per_cycle
-        horizon = max((e for e in end_epoch if e is not None), default=0)
-        n_forever = sum(1 for e in end_epoch if e is None)
-        shares, n_active = [], []
-        for e in range(horizon):
-            n = n_forever + sum(1 for h in end_epoch
-                                if h is not None and h > e)
-            shares.append(budget / n if n else budget)
-            n_active.append(n)
-        return shares, n_active
+        return build_share_schedule([(0, e) for e in end_epoch],
+                                    self.chip.bw_bytes_per_cycle)
 
     def _run_epoch(self, streams, traces):
         chip = self.chip

@@ -1,0 +1,460 @@
+"""Open-arrival (online) chip simulation: work arrives and departs at
+epoch boundaries while the chip is mid-run.
+
+The closed-batch model (:class:`repro.multicore.chip.CoreCluster`) fixes
+every core's stream up front and relaxes one share schedule over it.  The
+serving question -- how many concurrent requests does the shared memory
+system sustain? -- needs the *open* form: requests are injected while other
+cores are mid-flight, and a request that drains returns its bandwidth to
+the survivors.  :class:`OnlineChip` provides exactly that, as an
+event-driven extension of the same epoch arbiter:
+
+* A **segment** (one or more :class:`~repro.core.tiling.GemmSpec` lowered
+  back to back -- e.g. one serving request's prefill GEMM plus its decode
+  micro-GEMMs) is submitted to a core's FIFO queue at the current epoch.
+* A core **starts** its next queued segment at the first epoch boundary at
+  which it is free.  Engine and LSQ/bucket state are fresh per segment:
+  the chip hands work to cores at scheduling-epoch granularity, and the
+  engine synchronizes between requests (different requests share no tile
+  registers).
+* **Bandwidth** is arbitrated by the PR-2 epoch fixed point, generalized
+  to staggered activity spans ``[start, end)``
+  (:func:`repro.multicore.chip.build_share_schedule`): epoch *e*'s equal
+  share is recomputed over the segments active in *e*, so arrivals shrink
+  the survivors' shares and departures return them.
+* **Causality** makes the whole construction incremental: a segment's
+  timing depends only on shares in epochs it overlaps, so an event at
+  epoch *t* (arrival or start) can change shares only from *t* on --
+  everything that finished before *t* is a settled fact.  Arrivals mark
+  every in-flight segment dirty and the monotone relaxation re-runs for
+  the dirty set alone.
+
+Backends follow the chip model's contract: ``backend="reference"`` is the
+oracle (each re-simulation replays the full stream through
+:class:`~repro.core.timing.PipelineSimulator`); the fast backends run the
+trace-compiled numpy recurrence and *resume* each re-simulation from the
+latest :class:`~repro.core.fastsim.SimCarry` snapshot taken before the
+first epoch whose share changed, instead of replaying the prefix
+(``backend="jax"`` also uses the numpy segment runner here: online
+segments are far below the batched-scan break-even).  Results are
+backend-independent; ``tests/test_fastsim.py`` pins the parity.
+
+The serving batcher (:mod:`repro.serving.simbatch`) drives this model:
+admission policies query :meth:`OnlineChip.core_busy` /
+:meth:`OnlineChip.live_share` / :meth:`OnlineChip.free_at_estimate` at
+every decision epoch and inject admitted requests with
+:meth:`OnlineChip.submit`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import deque
+from typing import Sequence
+
+from ..core.fastsim import SNAP_STRIDE, SimCarry, run_segment
+from ..core.tiling import GemmSpec
+from ..core.timing import PipelineSimulator, TimingResult
+from ..core.trace import CompiledTrace, compiled_trace
+from .chip import (MAX_ARBITER_ROUNDS, ChipConfig, _lower_many,
+                   build_share_schedule, demands_bandwidth,
+                   stream_model_params)
+
+
+@dataclasses.dataclass(eq=False)
+class Segment:
+    """One unit of scheduled work on one core (handle; identity-hashed).
+
+    ``start``/``end`` are absolute epochs: the boundary at which the core
+    picked the segment up, and the first epoch in which it no longer draws
+    on the shared budget (``None`` while queued / unsettled).
+    """
+
+    sid: int
+    core: int
+    specs: tuple[GemmSpec, ...]
+    submit_epoch: int
+    demands: bool = True
+    start: int | None = None
+    end: int | None = None
+    # -- cached simulation state (managed by OnlineChip) --
+    stream: tuple | None = dataclasses.field(default=None, repr=False)
+    trace: CompiledTrace | None = dataclasses.field(default=None, repr=False)
+    result: TimingResult | None = dataclasses.field(default=None, repr=False)
+    last_grant: float = 0.0            # local cycles from the start boundary
+    _vis: tuple | None = dataclasses.field(default=None, repr=False)
+    _snaps: list[SimCarry] = dataclasses.field(default_factory=list,
+                                               repr=False)
+    #: settle pass of the last simulation (the unthrottled skip is valid
+    #: only within one settle -- see OnlineChip._settle)
+    _settle_stamp: int = dataclasses.field(default=-1, repr=False)
+
+    @property
+    def macs(self) -> int:
+        return sum(s.macs for s in self.specs)
+
+
+def _first_change(old: tuple, new: tuple) -> int | None:
+    """First local epoch at which two visible schedules differ.
+
+    A visible schedule is ``(share_prefix, tail_share)``.  Returns None
+    when they are effectively identical; otherwise the earliest epoch any
+    arithmetic could diverge -- conservative about prefix-length changes
+    (the scheduled-vs-tail code paths are mathematically equal but not
+    bit-identical, so a length change dirties everything past the shorter
+    prefix).
+    """
+    (s1, t1), (s2, t2) = old, new
+    n = min(len(s1), len(s2))
+    for k in range(n):
+        if s1[k] != s2[k]:
+            return k
+    if len(s1) != len(s2) or t1 != t2:
+        return n
+    return None
+
+
+class OnlineChip:
+    """Event-driven open-arrival chip simulation (see module docs).
+
+    The driver advances time explicitly: :meth:`submit` enqueues work at
+    the current epoch, :meth:`advance_to` moves the clock (starting queued
+    segments at every intermediate boundary where a core frees up), and
+    :meth:`next_event` reports the next epoch at which the chip's state
+    changes on its own.  All query methods settle the arbiter fixed point
+    lazily first, so observed shares/finish times are always converged.
+    """
+
+    def __init__(self, chip: ChipConfig, snap_stride: int = SNAP_STRIDE):
+        if chip.arbitration != "epoch":
+            raise ValueError("the online model is the epoch arbiter's "
+                             "open-arrival form; use arbitration='epoch'")
+        if snap_stride < 1:
+            raise ValueError("snap_stride must be >= 1")
+        self.chip = chip
+        self.snap_stride = snap_stride
+        self.epoch = 0
+        self._E = chip.epoch_cycles
+        self._budget = chip.bw_bytes_per_cycle
+        self._ref = chip.backend == "reference"
+        self._queues: list[deque[Segment]] = [deque()
+                                              for _ in range(chip.n_cores)]
+        self._segments: list[Segment] = []      # started, in start order
+        self._next_sid = 0
+        self._dirty = False
+        self._dirty_from = math.inf     # earliest epoch whose share moved
+        self._share_trace: list[float] = []
+        self._active_trace: list[int] = []
+        #: instrumentation: arbiter settles/rounds and how the fast path
+        #: re-simulated (full replays vs. snapshot resumes vs. pure skips).
+        self.stats = {"settles": 0, "rounds": 0, "sims_full": 0,
+                      "sims_resumed": 0, "instrs_resumed_past": 0}
+
+    # ------------------------------------------------------------ driver
+    def submit(self, core: int, specs: Sequence[GemmSpec]) -> Segment:
+        """Enqueue a segment on ``core`` at the current epoch.
+
+        The segment starts at the first epoch boundary >= now at which the
+        core is free (immediately, if it is free now).
+        """
+        seg = self._enqueue(core, specs)
+        self._pump(self.epoch)
+        return seg
+
+    def submit_batch(self, assignments: Sequence[tuple[int, Sequence[GemmSpec]]]
+                     ) -> list[Segment]:
+        """Enqueue several segments at the current epoch, then start them
+        together: one arbiter relaxation for the whole admission batch
+        instead of one per :meth:`submit` (the batcher's hot path)."""
+        segs = [self._enqueue(core, specs) for core, specs in assignments]
+        self._pump(self.epoch)
+        return segs
+
+    def _enqueue(self, core: int, specs: Sequence[GemmSpec]) -> Segment:
+        specs = tuple(specs)
+        if not specs:
+            raise ValueError("empty segment")
+        if not 0 <= core < self.chip.n_cores:
+            raise ValueError(f"core {core} out of range")
+        seg = Segment(self._next_sid, core, specs, self.epoch)
+        self._next_sid += 1
+        if self._ref:
+            seg.stream = tuple(_lower_many(specs, self.chip.policy))
+        else:
+            seg.trace = compiled_trace(
+                tuple(dataclasses.replace(s, name="") for s in specs),
+                self.chip.policy)
+        seg.demands = demands_bandwidth(self.chip, seg.stream, seg.trace)
+        self._queues[core].append(seg)
+        return seg
+
+    def advance_to(self, epoch: int) -> None:
+        """Move the clock to ``epoch``, starting queued segments at every
+        intermediate boundary where their core frees up (in causal order)."""
+        if epoch < self.epoch:
+            raise ValueError(f"cannot rewind from {self.epoch} to {epoch}")
+        self._pump(epoch)
+        self.epoch = epoch
+        self._retire()
+
+    def next_event(self) -> int | None:
+        """Earliest epoch > now at which the chip changes on its own: a
+        queued segment starts, or a busy core finishes its started work."""
+        self._pump(self.epoch)
+        self._settle()
+        cands = []
+        for c in range(self.chip.n_cores):
+            f = self._core_free_epoch(c)
+            if self._queues[c]:
+                f = max(f, self._queues[c][0].submit_epoch)
+            if f > self.epoch:
+                cands.append(f)
+        return min(cands, default=None)
+
+    def drain(self) -> None:
+        """Advance until every queue is empty and all work has retired."""
+        while True:
+            e = self.next_event()
+            if e is None:
+                return
+            self.advance_to(e)
+
+    # ----------------------------------------------- live chip state
+    def core_busy(self) -> list[bool]:
+        """Is each core occupied (running or queued work) right now?"""
+        self._settle()
+        return [self._core_free_epoch(c) > self.epoch
+                or bool(self._queues[c]) for c in range(self.chip.n_cores)]
+
+    def n_active(self) -> int:
+        """Segments drawing on the shared budget in the current epoch."""
+        self._settle()
+        return sum(1 for s in self._segments
+                   if s.demands and s.start <= self.epoch
+                   and (s.end is None or s.end > self.epoch))
+
+    def live_share(self) -> float:
+        """Bytes/cycle each active segment is granted in the current epoch."""
+        return self._budget / max(1, self.n_active())
+
+    def free_at_estimate(self) -> list[float]:
+        """Per-core busy-until estimate (absolute cycles): the settled
+        finish of started work plus unthrottled cost estimates of queued
+        segments -- the ``free_at`` vector incremental placement wants."""
+        from .scheduler import _estimate_cycles
+        self._settle()
+        now = self.epoch * self._E
+        out = []
+        for c in range(self.chip.n_cores):
+            t = max((self._finish(s) for s in self._segments if s.core == c),
+                    default=now)
+            t = max(t, now)
+            for seg in self._queues[c]:
+                t += sum(_estimate_cycles(s, self.chip) for s in seg.specs)
+            out.append(t)
+        return out
+
+    # ----------------------------------------------------- results
+    def finish_time(self, seg: Segment) -> float:
+        """Absolute retire time (cycles) of a started segment."""
+        self._settle()
+        if seg.start is None or seg.result is None:
+            raise RuntimeError(f"segment {seg.sid} has not started")
+        return self._finish(seg)
+
+    @property
+    def makespan(self) -> float:
+        """Latest settled retire time over all started segments."""
+        self._settle()
+        return max((self._finish(s) for s in self._segments), default=0.0)
+
+    @property
+    def share_trace(self) -> tuple[float, ...]:
+        self._settle()
+        return tuple(self._share_trace)
+
+    @property
+    def active_trace(self) -> tuple[int, ...]:
+        self._settle()
+        return tuple(self._active_trace)
+
+    # --------------------------------------------------- internals
+    def _finish(self, seg: Segment) -> float:
+        return seg.start * self._E + seg.result.cycles
+
+    def _core_free_epoch(self, c: int) -> int:
+        """First epoch boundary at which core ``c``'s started work is done
+        (requires settled state)."""
+        e = 0
+        for s in self._segments:
+            if s.core == c:
+                e = max(e, s.start, math.ceil(self._finish(s) / self._E))
+        return e
+
+    def _pump(self, upto: int) -> None:
+        """Start queued segments at every boundary <= ``upto`` where their
+        core is free, earliest boundary first (ties by core index): a start
+        at epoch *b* only changes shares in epochs >= *b*, so processing in
+        nondecreasing *b* keeps every earlier decision a settled fact.
+
+        All queue heads sharing the minimal boundary start in one pass
+        before re-settling -- same-boundary starts are independent (no
+        core's free epoch <= *b* can move on a share change at >= *b*),
+        and one relaxation per boundary beats one per segment.
+        """
+        while True:
+            self._settle()
+            cands: list[tuple[int, int]] = []
+            for c in range(self.chip.n_cores):
+                if not self._queues[c]:
+                    continue
+                b = max(self._core_free_epoch(c),
+                        self._queues[c][0].submit_epoch)
+                if b <= upto:
+                    cands.append((b, c))
+            if not cands:
+                return
+            b_min = min(b for b, _ in cands)
+            for b, c in sorted(cands):
+                if b != b_min:
+                    continue
+                seg = self._queues[c].popleft()
+                seg.start = b_min
+                seg.end = None if seg.demands else b_min
+                self._segments.append(seg)
+                if seg.demands:
+                    self._mark_dirty(b_min)
+                else:
+                    # zero shared-memory traffic: shares cannot change,
+                    # only the new segment itself needs simulating
+                    self._dirty = True
+
+    def _retire(self) -> None:
+        """Free the re-simulation state of segments that are facts.
+
+        Events only ever occur at epochs >= ``self.epoch`` (``_pump``
+        processes intermediate boundaries before the clock moves), so a
+        segment whose activity span closed at or before now can never be
+        marked dirty again: its result stands, and its snapshots, lowered
+        stream/trace reference and visible-schedule tuple are dead weight
+        over a long serving run.
+        """
+        for s in self._segments:
+            if s.end is not None and s.end <= self.epoch and s._vis is not \
+                    None:
+                s._snaps = []
+                s.stream = s.trace = None
+                s._vis = None
+
+    def _mark_dirty(self, from_epoch: int) -> None:
+        """An event at ``from_epoch`` invalidates every segment still
+        active there: back to 'active indefinitely' for the relaxation."""
+        self._dirty = True
+        self._dirty_from = min(self._dirty_from, from_epoch)
+        for s in self._segments:
+            if s.demands and (s.end is None or s.end > from_epoch):
+                s.end = None
+
+    def _settle(self) -> None:
+        """Relax the staggered-span share schedule to its fixed point.
+
+        Dirty segments start from 'active indefinitely' (pointwise-minimal
+        shares); each round re-simulates every segment whose visible
+        schedule changed and shrinks its activity span to its last granted
+        access -- shrinking spans only raise later shares, so the
+        iteration is monotone and converges exactly as in the closed-batch
+        arbiter.
+        """
+        if not self._dirty:
+            return
+        self.stats["settles"] += 1
+        stamp = self.stats["settles"]
+        dirty_from = self._dirty_from
+        segs = [s for s in self._segments if s.demands]
+        for s in self._segments:
+            if not s.demands and s.result is None:
+                # schedule-independent: no shared-memory traffic at all
+                self._simulate(s, ((), math.inf))
+                s.last_grant = 0.0
+        shares: list[float] = []
+        n_active: list[int] = []
+        for _ in range(MAX_ARBITER_ROUNDS):
+            self.stats["rounds"] += 1
+            shares, n_active = build_share_schedule(
+                [(s.start, s.end) for s in segs], self._budget)
+            n_forever = sum(1 for s in segs if s.end is None)
+            for s in segs:
+                if s.end is not None and s.end <= dirty_from:
+                    # settled fact: this settle's dirt only moves shares
+                    # in epochs >= dirty_from, all past this span's end
+                    continue
+                if s.end is None:
+                    vis = (tuple(shares[s.start:]),
+                           self._budget / n_forever)
+                else:
+                    vis = (tuple(shares[s.start:s.end]), self._budget)
+                # a segment the arbiter never delayed runs identically
+                # under any pointwise-larger schedule, and within one
+                # settle rounds only raise shares -- its result is final
+                # (cf. the closed-batch arbiter's skip; not valid across
+                # settles: an arrival lowers shares).  Reference stays
+                # the skip-free oracle.
+                unthrottled = (not self._ref and s._settle_stamp == stamp
+                               and s.result.load_stall_cycles == 0.0)
+                if s._vis != vis and not unthrottled:
+                    self._simulate(s, vis)
+                    s._settle_stamp = stamp
+            converged = True
+            for s in segs:
+                e = s.start + int(s.last_grant // self._E) + 1
+                e = e if s.end is None else min(s.end, e)
+                if e != s.end:
+                    s.end = e
+                    converged = False
+            if converged:
+                break
+        self._share_trace, self._active_trace = shares, n_active
+        self._dirty = False
+        self._dirty_from = math.inf
+
+    def _simulate(self, seg: Segment, vis: tuple) -> None:
+        """(Re-)simulate one segment under its visible schedule.
+
+        The reference oracle replays the full stream; the fast path
+        resumes from the latest snapshot whose horizon precedes the first
+        changed epoch (snapshots before it stay valid, ones after it are
+        discarded and re-recorded).
+        """
+        prefix, tail = vis
+        params = stream_model_params(self.chip, prefix, self._E, tail)
+        if self._ref:
+            model = params.make_model()
+            res = PipelineSimulator(self.chip.engine,
+                                    load_model=model).run(seg.stream)
+            seg.result, seg.last_grant = res, model.last_grant
+            self.stats["sims_full"] += 1
+        else:
+            carry = None
+            if seg._vis is not None and seg._snaps:
+                x = _first_change(seg._vis, vis)
+                if x is not None:
+                    boundary = x * self._E
+                    for c in seg._snaps:
+                        if c.horizon <= boundary:
+                            carry = c
+                        else:
+                            break
+            res, lg, snaps = run_segment(seg.trace, self.chip.engine,
+                                         params, carry=carry,
+                                         snap_stride=self.snap_stride)
+            if carry is None:
+                seg._snaps = snaps
+                self.stats["sims_full"] += 1
+            else:
+                seg._snaps = [c for c in seg._snaps
+                              if c.i <= carry.i] + snaps
+                self.stats["sims_resumed"] += 1
+                self.stats["instrs_resumed_past"] += carry.i
+            seg.result, seg.last_grant = res, lg
+        seg._vis = vis

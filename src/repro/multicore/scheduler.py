@@ -34,6 +34,7 @@ parallelism); only ``gang`` combines inter- and intra-GEMM parallelism.
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 from ..core.simulator import _simulate_cached
 from ..core.tiling import GemmSpec
@@ -126,6 +127,35 @@ def assign_gang(specs: list[GemmSpec], chip: ChipConfig,
             gang[core].append(shard)
             free_at[core] += est(shard)
     return gang if max(free_at) < whole_makespan else whole
+
+
+def assign_incremental(items: Sequence, chip: ChipConfig,
+                       free_at: Sequence[float]) -> list[list]:
+    """Place *new* work onto already-loaded cores without reshuffling.
+
+    The online form of ``work_queue``: ``free_at[c]`` is core *c*'s current
+    busy-until estimate (e.g. :meth:`repro.multicore.online.OnlineChip.
+    free_at_estimate`); each item goes, in submission order, to the core
+    that frees up soonest, and the estimate is advanced by the item's
+    unthrottled cost.  An item is either one :class:`GemmSpec` or a
+    sequence of them that must land on a single core as a unit (a serving
+    request's prefill + decode chain); items are returned as given, so the
+    caller can map them back.  Only the per-core *additions* are returned
+    -- the caller owns the existing placement.  With ``n_cores == 1`` (and
+    any ``free_at``) this is all items, in submission order, on core 0 --
+    the single-core reduction the tests pin down.
+    """
+    if len(free_at) != chip.n_cores:
+        raise ValueError(f"need one free_at entry per core, got "
+                         f"{len(free_at)} for {chip.n_cores} cores")
+    out: list[list] = [[] for _ in range(chip.n_cores)]
+    free = list(free_at)
+    for item in items:
+        specs = (item,) if isinstance(item, GemmSpec) else tuple(item)
+        core = min(range(chip.n_cores), key=lambda c: free[c])
+        out[core].append(item)
+        free[core] += sum(_estimate_cycles(s, chip) for s in specs)
+    return out
 
 
 def assign(specs: list[GemmSpec], chip: ChipConfig,

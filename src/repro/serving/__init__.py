@@ -1,8 +1,14 @@
-"""Serving substrate: batched prefill/decode + sequence-parallel decode."""
+"""Serving substrate: batched prefill/decode + sequence-parallel decode,
+plus the simulated contention-aware batcher over the RASA chip model
+(:mod:`repro.serving.simbatch` -- see ``docs/serving_sim.md``)."""
 
 from .engine import (ServeSession, decode_state_shardings, jit_decode_step,
                      jit_prefill)
+from .simbatch import (POLICIES, BatchReport, ServeRequest, run_batcher,
+                       skewed_trace, synthetic_trace)
 from .sp_decode import sp_flash_decode
 
 __all__ = ["ServeSession", "decode_state_shardings", "jit_decode_step",
-           "jit_prefill", "sp_flash_decode"]
+           "jit_prefill", "sp_flash_decode",
+           "POLICIES", "BatchReport", "ServeRequest", "run_batcher",
+           "skewed_trace", "synthetic_trace"]

@@ -94,20 +94,57 @@ def _params_shardings(api: ModelApi, ctx: MeshContext):
 
 @dataclasses.dataclass
 class ServeSession:
-    """Greedy batched decoding session (single-host friendly)."""
+    """Greedy batched decoding session (single-host friendly).
+
+    Prefill and decode are staged through cached jitted step functions --
+    one compilation per batch size, shared across every ``generate`` call
+    of the session (the compiled-function cache is keyed on the batch
+    size; ``max_seq`` is fixed per session).  Inside an active
+    :func:`repro.distributed.sharding.mesh_context` the session uses the
+    sharded :func:`jit_prefill` / :func:`jit_decode_step` wrappers
+    (KV-cache shardings, donated state); outside one it falls back to
+    plain ``jax.jit`` of the model api.
+    """
     api: ModelApi
     params: Any
     max_seq: int = 128
+    _compiled: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    def _fns(self, batch: int):
+        """(prefill_fn, decode_fn) for this batch size, compiled once.
+
+        Keyed on the active mesh context too: a session used both inside
+        and outside ``mesh_context`` (or across different meshes) must not
+        reuse functions compiled for the wrong sharding.
+        """
+        from ..distributed.sharding import current_ctx
+        ctx = current_ctx()
+        key = (batch, None) if ctx is None else \
+            (batch, ctx.mesh, ctx.parallel)
+        hit = self._compiled.get(key)
+        if hit is not None:
+            return hit
+        if ctx is not None:
+            template = jax.eval_shape(
+                lambda: self.api.init_decode_state(batch, self.max_seq))
+            fns = (jit_prefill(self.api, ctx, template),
+                   jit_decode_step(self.api, ctx, template))
+        else:
+            fns = (jax.jit(self.api.prefill, donate_argnums=(2,)),
+                   jax.jit(self.api.decode_step, donate_argnums=(2,)))
+        self._compiled[key] = fns
+        return fns
 
     def generate(self, prompts: jax.Array, steps: int) -> jax.Array:
         """prompts: [B, S] int32 -> generated tokens [B, steps]."""
         b = prompts.shape[0]
+        prefill, decode = self._fns(b)
         state = self.api.init_decode_state(b, self.max_seq)
-        logits, state = self.api.prefill(self.params, prompts, state)
+        logits, state = prefill(self.params, prompts, state)
         outs = []
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         for _ in range(steps):
             outs.append(tok)
-            logits, state = self.api.decode_step(self.params, tok, state)
+            logits, state = decode(self.params, tok, state)
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return jnp.stack(outs, axis=1)

@@ -1,0 +1,350 @@
+"""Contention-aware serving batcher over the online chip model.
+
+``repro.serving`` serves real tokens on real hardware; this module answers
+the capacity-planning question next to it on the *simulated* RASA chip:
+given a stream of serving requests -- each one prefill GEMM plus a chain of
+decode micro-GEMMs, lowered through the same
+:mod:`repro.core.tiling` register-aware compiler as everything else -- how
+should requests be admitted into the chip so the shared memory system
+sustains them?  Per-engine throughput is flat for batch 1..16 (paper
+Fig. 7); at chip scale the binding resource is bandwidth, so batch
+formation must see *chip* state, not a fixed batch knob.
+
+Requests flow through :class:`repro.multicore.online.OnlineChip`: they
+arrive at epoch boundaries, an **admission policy** decides at every
+decision epoch (arrival or completion) which waiting requests enter the
+chip and on which core, and admitted requests run to completion under the
+epoch bandwidth arbiter.  Policies (:data:`POLICIES`):
+
+``fixed``
+    The classic static batcher and the baseline every aware policy must
+    beat: admit requests in groups of ``batch_size`` the moment a full
+    group is waiting (plus the final partial group once arrivals end),
+    placed blind round-robin.  Sees neither occupancy nor bandwidth.
+``bandwidth``
+    Threshold admission: admit head-of-line requests only while the
+    projected per-request bandwidth share ``budget / (n_active + k + 1)``
+    stays at or above ``min_share``; placement on the soonest-free core
+    (:func:`repro.multicore.scheduler.assign_incremental`).
+``occupancy``
+    Occupancy-aware: admit at most one request per *idle* core (never
+    queues behind a busy engine), subject to the same bandwidth headroom
+    check as ``bandwidth``.  This is the policy that sees both live chip
+    signals.
+
+Work conservation: whenever the chip is completely idle and a
+threshold policy (``bandwidth``/``occupancy``) declines every waiting
+request, the head request is admitted anyway (a share floor must never
+deadlock an idle chip); the forced request goes to the soonest-free core.
+The ``fixed`` policy is exempt -- idling until a full group has arrived is
+its defining behavior, and it cannot deadlock (the partial tail group is
+flushed once arrivals end).
+
+:func:`run_batcher` returns a :class:`BatchReport` with per-request
+latencies (p50/p99), the makespan, and the admission timeline.  Results
+are backend-independent (``reference``/``fast``/``numpy``); the parity
+suite pins it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+from collections import deque
+from typing import Sequence
+
+import numpy as np
+
+from ..core.fastsim import SNAP_STRIDE
+from ..core.tiling import GemmSpec
+from ..multicore.chip import ChipConfig
+from ..multicore.online import OnlineChip
+from ..multicore.scheduler import assign_incremental
+
+POLICIES = ("fixed", "bandwidth", "occupancy")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeRequest:
+    """One serving request: a prefill GEMM plus its decode micro-GEMMs.
+
+    ``arrival_epoch`` is the scheduling epoch at whose boundary the request
+    enters the arrival queue.  Lowered onto one core as a single segment:
+    decode steps of one request are sequentially dependent.
+    """
+
+    name: str
+    arrival_epoch: int
+    prefill: GemmSpec
+    decode: tuple[GemmSpec, ...] = ()
+
+    @property
+    def specs(self) -> tuple[GemmSpec, ...]:
+        return (self.prefill, *self.decode)
+
+    @property
+    def macs(self) -> int:
+        return sum(s.macs for s in self.specs)
+
+
+def synthetic_trace(n_requests: int = 16, *, seed: int = 0,
+                    mean_gap: int = 2, d_model: int = 512,
+                    prompt_lens: Sequence[int] = (32, 64, 128),
+                    decode_steps: Sequence[int] = (2, 4, 8),
+                    decode_batch: int = 8) -> tuple[ServeRequest, ...]:
+    """Deterministic synthetic request trace.
+
+    Inter-arrival gaps are uniform on ``[0, 2 * mean_gap]`` epochs, so
+    ``mean_gap`` is the offered-load knob (smaller = heavier load); prompt
+    lengths and decode-chain lengths are drawn from the given menus.  Each
+    request is ``prefill[M=prompt, K=N=d_model]`` followed by
+    ``decode[M=decode_batch, K=N=d_model]`` per step -- the Fig. 7 shapes,
+    one layer GEMM standing in for the model's layer stack.
+    """
+    rng = random.Random(seed)
+    reqs, epoch = [], 0
+    for i in range(n_requests):
+        if i:
+            epoch += rng.randrange(0, 2 * mean_gap + 1)
+        prompt = rng.choice(tuple(prompt_lens))
+        steps = rng.choice(tuple(decode_steps))
+        prefill = GemmSpec(f"r{i}.prefill", M=prompt, K=d_model, N=d_model)
+        decode = tuple(GemmSpec(f"r{i}.d{j}", M=decode_batch, K=d_model,
+                                N=d_model) for j in range(steps))
+        reqs.append(ServeRequest(f"r{i}", epoch, prefill, decode))
+    return tuple(reqs)
+
+
+def skewed_trace(d_model: int = 512, *, heavy_prompt: int = 512,
+                 light_prompt: int = 32, n_heavy: int = 2,
+                 n_light: int = 10,
+                 decode_batch: int = 8) -> tuple[ServeRequest, ...]:
+    """The canonical skewed 4-core trace (acceptance scenario).
+
+    ``n_heavy`` prefill-heavy requests arrive first, then bursts of light
+    decode-dominated requests.  Blind round-robin placement piles light
+    requests behind the heavy ones while other cores drain dry;
+    occupancy-aware admission routes them to idle engines.  The keyword
+    knobs scale the trace down for oracle-backend (reference) test runs.
+    """
+    heavy = [ServeRequest(
+        f"h{i}", 0,
+        GemmSpec(f"h{i}.prefill", M=heavy_prompt, K=d_model, N=d_model),
+        tuple(GemmSpec(f"h{i}.d{j}", M=decode_batch, K=d_model, N=d_model)
+              for j in range(4))) for i in range(n_heavy)]
+    light = [ServeRequest(
+        f"l{i}", i // 2,
+        GemmSpec(f"l{i}.prefill", M=light_prompt, K=d_model, N=d_model),
+        tuple(GemmSpec(f"l{i}.d{j}", M=decode_batch, K=d_model, N=d_model)
+              for j in range(2))) for i in range(n_light)]
+    return tuple(heavy + light)
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchReport:
+    """Outcome of one batched-serving run (cf. ChipReport).
+
+    Per-request arrays (``latencies``/``finish_times``/...) are in the
+    caller's submission order, ``names[i]`` identifying request *i*.
+    """
+
+    policy: str
+    design: str
+    n_cores: int
+    n_requests: int
+    epoch_cycles: float
+    makespan: float                     # cycles, first arrival to last retire
+    names: tuple[str, ...]
+    latencies: tuple[float, ...]        # finish - arrival, per request
+    finish_times: tuple[float, ...]
+    arrival_epochs: tuple[int, ...]
+    admit_epochs: tuple[int, ...]       # when each request entered the chip
+    macs: int
+
+    def latency_percentile(self, q: float) -> float:
+        """Linear-interpolated percentile of the request latencies."""
+        if not self.latencies:
+            return 0.0
+        return float(np.percentile(self.latencies, q))
+
+    @property
+    def p50_latency(self) -> float:
+        return self.latency_percentile(50.0)
+
+    @property
+    def p99_latency(self) -> float:
+        return self.latency_percentile(99.0)
+
+    @property
+    def mean_latency(self) -> float:
+        return sum(self.latencies) / len(self.latencies) \
+            if self.latencies else 0.0
+
+    @property
+    def throughput_macs_per_cycle(self) -> float:
+        return self.macs / self.makespan if self.makespan else 0.0
+
+
+class _Batcher:
+    """One admission-policy run over an arrival trace (driver state)."""
+
+    def __init__(self, requests: Sequence[ServeRequest], chip: ChipConfig,
+                 policy: str, batch_size: int, min_share: float,
+                 snap_stride: int):
+        if policy not in POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; "
+                             f"available: {POLICIES}")
+        if batch_size < 1:
+            raise ValueError("batch_size must be >= 1")
+        self.chip = chip
+        self.policy = policy
+        self.batch_size = batch_size
+        self.min_share = min_share
+        self.submitted = list(requests)     # caller order, for the report
+        self.requests = sorted(requests, key=lambda r: r.arrival_epoch)
+        self.sim = OnlineChip(chip, snap_stride=snap_stride)
+        self.waiting: deque[ServeRequest] = deque()
+        self.next_arrival = 0               # index into self.requests
+        self.segments: dict[str, object] = {}
+        self.admit_epochs: dict[str, int] = {}
+        self._rr = 0                        # fixed policy's blind pointer
+
+    # -- admission ---------------------------------------------------------
+    def _headroom(self) -> int:
+        """How many more requests fit before the projected per-request
+        share drops below ``min_share`` (conservative: counts currently
+        active segments plus the admissions of this decision epoch)."""
+        if self.min_share <= 0:
+            return len(self.waiting)
+        n_act = self.sim.n_active()
+        budget = self.chip.bw_bytes_per_cycle
+        k = 0
+        while (k < len(self.waiting)
+               and budget / (n_act + k + 1) >= self.min_share):
+            k += 1
+        return k
+
+    def _admit(self) -> list[tuple[ServeRequest, int]]:
+        """The policy's admissions for the current epoch: (request, core)."""
+        sim, waiting = self.sim, self.waiting
+        n_cores = self.chip.n_cores
+        if self.policy == "fixed":
+            out = []
+            drained = self.next_arrival >= len(self.requests)
+            while (len(waiting) >= self.batch_size
+                   or (drained and waiting)):
+                for _ in range(min(self.batch_size, len(waiting))):
+                    out.append((waiting.popleft(), self._rr % n_cores))
+                    self._rr += 1
+            return out
+        take = min(len(waiting), self._headroom())
+        if self.policy == "occupancy":
+            free_cores = [c for c, busy in enumerate(sim.core_busy())
+                          if not busy]
+            take = min(take, len(free_cores))
+            return [(waiting.popleft(), free_cores[i]) for i in range(take)]
+        # bandwidth: headroom-gated, placed on the soonest-free core
+        reqs = [waiting.popleft() for _ in range(take)]
+        return self._soonest_free(reqs)
+
+    def _soonest_free(self, reqs: Sequence[ServeRequest]
+                      ) -> list[tuple[ServeRequest, int]]:
+        # one freshly-built list per request: items are distinct objects by
+        # construction, so identity maps them back to their request even
+        # when two requests have equal GEMM shapes
+        items = [list(r.specs) for r in reqs]
+        by_item = {id(item): r for item, r in zip(items, reqs)}
+        placement = assign_incremental(items, self.chip,
+                                       self.sim.free_at_estimate())
+        out = []
+        for core, placed in enumerate(placement):
+            for item in placed:
+                out.append((by_item[id(item)], core))
+        return out
+
+    # -- driver ------------------------------------------------------------
+    def run(self) -> BatchReport:
+        sim = self.sim
+        if self.requests:
+            t = self.requests[0].arrival_epoch
+            while self.next_arrival < len(self.requests) or self.waiting:
+                sim.advance_to(t)
+                while (self.next_arrival < len(self.requests)
+                       and self.requests[self.next_arrival].arrival_epoch
+                       <= t):
+                    self.waiting.append(self.requests[self.next_arrival])
+                    self.next_arrival += 1
+                admitted = self._admit()
+                if (not admitted and self.waiting
+                        and self.policy != "fixed"
+                        and not any(sim.core_busy())):
+                    # work conservation: a threshold policy must not
+                    # starve a waiting request on an idle chip.  The
+                    # fixed policy is exempt -- waiting for a full group
+                    # is its defining (and deadlock-free) behavior.
+                    admitted = self._soonest_free([self.waiting.popleft()])
+                segs = sim.submit_batch([(core, req.specs)
+                                         for req, core in admitted])
+                for (req, _), seg in zip(admitted, segs):
+                    self.segments[req.name] = seg
+                    self.admit_epochs[req.name] = t
+                cands = []
+                if self.next_arrival < len(self.requests):
+                    cands.append(
+                        self.requests[self.next_arrival].arrival_epoch)
+                if self.waiting:
+                    nxt = sim.next_event()
+                    if nxt is not None:
+                        cands.append(nxt)
+                if not cands:
+                    break
+                t = min(cands)
+            sim.drain()
+        E = self.chip.epoch_cycles
+        reqs = self.submitted
+        finishes = [sim.finish_time(self.segments[r.name]) for r in reqs]
+        latencies = [f - r.arrival_epoch * E
+                     for f, r in zip(finishes, reqs)]
+        first = min((r.arrival_epoch for r in reqs), default=0) * E
+        return BatchReport(
+            policy=self.policy,
+            design=self.chip.design,
+            n_cores=self.chip.n_cores,
+            n_requests=len(reqs),
+            epoch_cycles=E,
+            makespan=max(finishes, default=first) - first,
+            names=tuple(r.name for r in reqs),
+            latencies=tuple(latencies),
+            finish_times=tuple(finishes),
+            arrival_epochs=tuple(r.arrival_epoch for r in reqs),
+            admit_epochs=tuple(self.admit_epochs[r.name] for r in reqs),
+            macs=sum(r.macs for r in reqs),
+        )
+
+
+def run_batcher(requests: Sequence[ServeRequest],
+                chip: ChipConfig | None = None, *,
+                policy: str = "occupancy", batch_size: int = 4,
+                min_share: float | None = None,
+                snap_stride: int = SNAP_STRIDE,
+                **chip_kwargs) -> BatchReport:
+    """Serve an arrival trace through the online chip model.
+
+    ``min_share`` (bytes/cycle) is the bandwidth-headroom floor of the
+    ``bandwidth``/``occupancy`` policies; the default admits up to two
+    concurrent requests per core before throttling admission.  Extra
+    keyword arguments construct the :class:`ChipConfig` when none is
+    given (cf. :func:`repro.multicore.simulate_chip`).
+    """
+    if chip is None:
+        chip = ChipConfig(**chip_kwargs)
+    elif chip_kwargs:
+        raise TypeError(f"pass either a ChipConfig or config kwargs, not "
+                        f"both: {sorted(chip_kwargs)}")
+    if min_share is None:
+        min_share = chip.bw_bytes_per_cycle / (2.0 * chip.n_cores)
+    names = [r.name for r in requests]
+    if len(set(names)) != len(names):
+        raise ValueError("request names must be unique")
+    return _Batcher(requests, chip, policy, batch_size, min_share,
+                    snap_stride).run()

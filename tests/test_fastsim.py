@@ -318,3 +318,81 @@ def test_single_core_fast_equals_reference_chip():
                                               backend=be))
         assert rep.cycles == pytest.approx(ref.cycles, rel=REL), be
         assert rep.bw_stall_cycles == 0.0, be
+
+
+# ------------------------------------------------ resumable segment runner
+def test_run_segment_resume_parity():
+    """Resuming the inlined numpy recurrence from a snapshot is bit-exact:
+    under the unchanged schedule from any snapshot, and under a schedule
+    whose shares changed only past the snapshot's horizon -- the invariant
+    the online chip model's re-simulation path rests on."""
+    from repro.core.fastsim import run_segment
+    cfg = get_design("RASA-WLBP")
+    E = 2048.0
+    stream = random_stream(random.Random(11), 1500)
+    trace = compile_stream(stream)
+    shares_a = tuple([6.0, 9.0, 12.0, 18.0, 24.0, 32.0] * 6)
+    pa = StreamModelParams(cfg.load_ports, 1, shares_a, E, 64.0,
+                           2048.0, True)
+    ra, lga, snaps = run_segment(trace, cfg, pa, snap_stride=128)
+    assert snaps
+    for s1, s2 in zip(snaps, snaps[1:]):
+        assert s2.i > s1.i and s2.horizon >= s1.horizon
+    for s in snaps[::4]:
+        r2, lg2, _ = run_segment(trace, cfg, pa, carry=s)
+        assert (r2.cycles, lg2, r2.wl_skips, r2.load_stall_cycles) == \
+            (ra.cycles, lga, ra.wl_skips, ra.load_stall_cycles), s.i
+    resumed_any = False
+    for x in (8, 16, 24):
+        shares_b = shares_a[:x] + tuple(v * 0.5 for v in shares_a[x:])
+        pb = StreamModelParams(cfg.load_ports, 1, shares_b, E, 48.0,
+                               2048.0, True)
+        rb, lgb, _ = run_segment(trace, cfg, pb)
+        model = EpochBandwidthLoadModel(cfg.load_ports, shares_b, E, 48.0,
+                                        2048.0, 1, True)
+        ref = PipelineSimulator(cfg, load_model=model).run(stream)
+        assert rb.cycles == ref.cycles and lgb == model.last_grant, x
+        usable = [s for s in snaps if s.horizon <= x * E]
+        if not usable:
+            continue
+        resumed_any = True
+        r2, lg2, _ = run_segment(trace, cfg, pb, carry=usable[-1])
+        assert (r2.cycles, lg2, r2.wl_skips, r2.load_stall_cycles) == \
+            (rb.cycles, lgb, rb.wl_skips, rb.load_stall_cycles), x
+    assert resumed_any          # the scenario must actually exercise resume
+
+
+# ------------------------------------------------ online chip parity
+def _online_scenario(backend):
+    """Staggered arrivals + a queued mid-run injection on a tight budget."""
+    from repro.multicore import OnlineChip
+    chip = ChipConfig(n_cores=2, design="RASA-WLBP",
+                      bw_bytes_per_cycle=24.0, backend=backend)
+    oc = OnlineChip(chip, snap_stride=512)
+    segs = [oc.submit(0, [TABLE_I["DLRM-2"]])]
+    oc.advance_to(2)
+    segs.append(oc.submit(1, [SMALL]))               # arrival mid-run
+    oc.advance_to(4)
+    segs.append(oc.submit(0, [GemmSpec("odd", 200, 96, 150)]))  # queued
+    segs.append(oc.submit(1, [SMALL]))
+    oc.drain()
+    return oc, segs
+
+
+def test_online_chip_backend_parity():
+    """Every arrival/departure of the online scenario lands identically on
+    the reference, numpy and fast backends: per-segment finish times,
+    makespan, and the converged share/active traces."""
+    ref, rsegs = _online_scenario("reference")
+    for be in ["numpy", "fast"]:
+        oc, segs = _online_scenario(be)
+        assert oc.makespan == pytest.approx(ref.makespan, rel=REL), be
+        for s, rs in zip(segs, rsegs):
+            assert oc.finish_time(s) == pytest.approx(
+                ref.finish_time(rs), rel=REL), (be, s.sid)
+            assert (s.start, s.end) == (rs.start, rs.end), (be, s.sid)
+        assert oc.share_trace == pytest.approx(ref.share_trace), be
+        assert oc.active_trace == ref.active_trace, be
+        # the fast path must actually resume from snapshots, not replay
+        assert oc.stats["sims_resumed"] > 0, be
+        assert oc.stats["instrs_resumed_past"] > 0, be

@@ -1,0 +1,133 @@
+"""Golden-fixture regression tests for the paper-figure reproductions.
+
+The analytic numbers behind Fig. 2 (PE utilization), Fig. 5 (normalized
+runtime of the canonical designs) and Fig. 7 (batch sensitivity) are
+checked into ``tests/fixtures/`` and re-derived here from the live timing
+model, so a refactor of ``repro.core.timing`` / ``repro.core.tiling``
+cannot silently drift the reproduction: any cycle-level change must either
+be a bug or come with a deliberate fixture regeneration
+
+    PYTHONPATH=src python tests/test_golden_figures.py --regen
+
+Fixtures pin raw cycles *and* the normalized figure numbers, across all
+eight canonical designs, on the fast backend (backend-independence is the
+parity suite's job; the fixtures only need one deterministic backend).
+Fig. 5 uses the FC-layer subset (the ResNet conv layers' multi-million
+instruction streams would dominate suite runtime without adding design
+coverage); Fig. 7 stops at batch 256 for the same reason -- the asymptote
+claim itself is asserted in ``benchmarks/fig7_batch.py``.
+"""
+
+import json
+import pathlib
+
+import pytest
+
+from repro.core import DESIGNS, TABLE_I, batch_sweep, sweep_workload
+from repro.core.designs import EngineConfig
+from repro.core.isa import Instr, Op
+from repro.core.timing import PipelineSimulator, serial_mm_latency
+
+FIXTURES = pathlib.Path(__file__).parent / "fixtures"
+REL = 1e-6
+
+FIG2_DIMS = ((4, 4), (8, 8), (16, 16), (32, 16), (32, 32))
+FIG2_TMS = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+FIG5_LAYERS = ("DLRM-1", "DLRM-2", "BERT-1", "BERT-3")
+FIG7_BATCHES = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+
+
+def compute_fig2() -> dict:
+    """util(T_M) per systolic-array dim, simulator-checked closed form."""
+    out = {}
+    for rows, cols in FIG2_DIMS:
+        cfg = EngineConfig(name=f"sa{rows}x{cols}", rows=rows, cols=cols)
+        for tm in FIG2_TMS:
+            res = PipelineSimulator(cfg).run(
+                [Instr(Op.MM, dst=0, src1=1, src2=2,
+                       tm=tm, tk=rows, tn=cols)])
+            closed = tm / serial_mm_latency(rows, cols, tm)
+            assert abs(res.utilization - closed) < 1e-9
+            out[f"{rows}x{cols}_tm{tm}"] = res.utilization
+    return out
+
+
+def compute_fig5() -> dict:
+    """Cycles + BASE-normalized runtime per (layer, design), Alg-1 policy."""
+    specs = [TABLE_I[k] for k in FIG5_LAYERS]
+    grid = sweep_workload(specs, backend="fast")
+    out = {}
+    for layer, row in zip(FIG5_LAYERS, grid):
+        base = row["BASE"].cycles
+        for design in sorted(DESIGNS):
+            out[f"{layer}/{design}"] = {
+                "cycles": row[design].cycles,
+                "normalized": row[design].cycles / base,
+            }
+    return out
+
+
+def compute_fig7() -> dict:
+    """RASA-DMDB-WLS batch sweep: cycles + BASE-normalized runtime."""
+    sweep = batch_sweep(batches=FIG7_BATCHES)
+    grid = sweep_workload(list(sweep.values()),
+                          designs=["BASE", "RASA-DMDB-WLS"], backend="fast")
+    out = {}
+    for batch, row in zip(FIG7_BATCHES, grid):
+        out[str(batch)] = {
+            "cycles": row["RASA-DMDB-WLS"].cycles,
+            "normalized": row["RASA-DMDB-WLS"].cycles / row["BASE"].cycles,
+        }
+    return out
+
+
+COMPUTE = {
+    "fig2_utilization": compute_fig2,
+    "fig5_runtime": compute_fig5,
+    "fig7_batch": compute_fig7,
+}
+
+
+def _assert_close(fixture, fresh, path):
+    if isinstance(fixture, dict):
+        assert isinstance(fresh, dict) and fixture.keys() == fresh.keys(), \
+            f"{path}: key drift {sorted(fixture)} != {sorted(fresh)}"
+        for k in fixture:
+            _assert_close(fixture[k], fresh[k], f"{path}/{k}")
+    else:
+        assert fresh == pytest.approx(fixture, rel=REL), \
+            f"{path}: golden {fixture} != recomputed {fresh}"
+
+
+@pytest.mark.parametrize("name", sorted(COMPUTE))
+def test_golden_figure(name):
+    """The live timing model reproduces the checked-in figure numbers."""
+    p = FIXTURES / f"{name}.json"
+    assert p.exists(), (f"missing fixture {p}; regenerate with "
+                        f"`python tests/test_golden_figures.py --regen`")
+    _assert_close(json.loads(p.read_text()), COMPUTE[name](), name)
+
+
+def test_fig7_small_batches_flat():
+    """The Fig. 7 headline -- batches 1..16 cost exactly the same -- must
+    hold in the fixture itself (not only in the recomputation)."""
+    table = json.loads((FIXTURES / "fig7_batch.json").read_text())
+    small = [table[str(b)]["cycles"] for b in (1, 2, 4, 8, 16)]
+    assert max(small) - min(small) < 1e-9
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--regen", action="store_true",
+                    help="recompute and overwrite the fixture files")
+    if not ap.parse_args().regen:
+        ap.error("run under pytest, or pass --regen to rebuild fixtures")
+    FIXTURES.mkdir(exist_ok=True)
+    for name, fn in sorted(COMPUTE.items()):
+        out = fn()
+        (FIXTURES / f"{name}.json").write_text(json.dumps(out, indent=2,
+                                                          sort_keys=True))
+        print(f"wrote {name}.json ({len(out)} entries)", file=sys.stderr)

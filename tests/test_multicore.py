@@ -368,6 +368,53 @@ def test_gang_no_split_when_balanced():
     assert all(s[0].name == "small" for s in shards)
 
 
+def test_assign_gang_single_spec():
+    """gang with a one-GEMM workload: MACs conserved through whatever
+    split it picks; a single-tile GEMM cannot split and lands whole."""
+    chip = ChipConfig(n_cores=4, design="RASA-WLBP")
+    shards = assign([SMALL], chip, "gang")
+    assert sum(s.macs for core in shards for s in core) == SMALL.macs
+    tiny = GemmSpec("tiny", 16, 32, 16)         # one hardware tile
+    shards = assign([tiny], chip, "gang")
+    placed = [s for core in shards for s in core]
+    assert len(placed) == 1 and placed[0].macs == tiny.macs
+    # n_cores=1: the whole workload, in submission order, on core 0
+    one = ChipConfig(n_cores=1, design="RASA-WLBP")
+    assert assign([SMALL], one, "gang") == [[SMALL]]
+
+
+def test_assign_incremental_single_core_reduction():
+    """n_cores=1: all items in submission order on core 0 -- exactly the
+    work_queue placement."""
+    from repro.multicore import assign_incremental
+    wl = _skewed_workload()
+    one = ChipConfig(n_cores=1, design="RASA-WLBP")
+    assert assign_incremental(wl, one, [0.0]) == assign(wl, one,
+                                                        "work_queue")
+    # any backlog estimate: still core 0, still submission order
+    assert assign_incremental(wl, one, [1e9]) == [list(wl)]
+
+
+def test_assign_incremental_respects_backlog_and_groups():
+    """Items go to the soonest-free core given the existing backlog;
+    grouped items (a serving request's GEMM chain) stay on one core."""
+    from repro.multicore import assign_incremental
+    chip = ChipConfig(n_cores=2, design="RASA-WLBP")
+    # core 0 is busy forever: everything lands on core 1
+    placed = assign_incremental([SMALL, ODD], chip, [math.inf, 0.0])
+    assert placed[0] == [] and placed[1] == [SMALL, ODD]
+    # a group is atomic and returned as given
+    group = (SMALL, ODD)
+    placed = assign_incremental([group, SMALL], chip, [0.0, 0.0])
+    flat = [item for core in placed for item in core]
+    assert group in flat and SMALL in flat
+    gcore = next(c for c, items in enumerate(placed) if group in items)
+    # the single GEMM went to the other core (the group filled the first)
+    assert SMALL in placed[1 - gcore]
+    with pytest.raises(ValueError):
+        assign_incremental([SMALL], chip, [0.0])    # one entry per core
+
+
 def test_chip_report_aggregates():
     rep = simulate_chip(SMALL, ChipConfig(n_cores=4, design="RASA-WLBP"))
     assert len(rep.per_core_cycles) == 4

@@ -137,3 +137,34 @@ def test_serve_session_greedy_decode():
     out = session.generate(prompts, steps=4)
     assert out.shape == (2, 4)
     assert int(out.min()) >= 0 and int(out.max()) < cfg.model.vocab
+
+
+def test_serve_session_compiles_once_across_generates():
+    """generate routes through cached jitted prefill/decode steps: the
+    model functions are traced once per batch size, not once per call."""
+    cfg = get_config("gemma-2b", smoke=True)
+    api = build_model(cfg)
+    counts = {"prefill": 0, "decode": 0}
+    orig_prefill, orig_decode = api.prefill, api.decode_step
+
+    def counting_prefill(params, tokens, state):
+        counts["prefill"] += 1
+        return orig_prefill(params, tokens, state)
+
+    def counting_decode(params, tok, state):
+        counts["decode"] += 1
+        return orig_decode(params, tok, state)
+
+    api = dataclasses.replace(api, prefill=counting_prefill,
+                              decode_step=counting_decode)
+    params = api.init(jax.random.key(0))
+    session = ServeSession(api, params, max_seq=48)
+    prompts = jnp.asarray(
+        np.random.default_rng(1).integers(0, cfg.model.vocab, (2, 8)),
+        jnp.int32)
+    out1 = session.generate(prompts, steps=3)
+    assert counts == {"prefill": 1, "decode": 1}    # one trace each
+    out2 = session.generate(prompts, steps=3)
+    assert counts == {"prefill": 1, "decode": 1}    # no re-trace
+    assert out1.shape == out2.shape == (2, 3)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
