@@ -39,6 +39,7 @@ import repro.core.tiling
 import repro.core.timing
 import repro.core.trace
 import repro.core.workloads
+import repro.multicore.arbiter
 import repro.multicore.chip
 import repro.multicore.partition
 import repro.multicore.scheduler
@@ -62,7 +63,8 @@ ARB_BW = 32.0
 
 def _fingerprint() -> str:
     return model_fingerprint(
-        repro.multicore.chip, repro.multicore.partition,
+        repro.multicore.arbiter, repro.multicore.chip,
+        repro.multicore.partition,
         repro.multicore.scheduler, repro.core.timing, repro.core.tiling,
         repro.core.designs, repro.core.isa, repro.core.simulator,
         repro.core.trace, repro.core.fastsim,

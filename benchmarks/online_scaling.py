@@ -1,0 +1,133 @@
+"""Online-arbiter scaling: settled-prefix caching vs. rebuild-from-epoch-0.
+
+Drives a long synthetic serving trace (default 1000 requests) through the
+open-arrival chip model twice -- once with the span arbiter's settled-prefix
+cache and retired-span pruning (the default), once in the pre-refactor
+rebuild-from-epoch-0 baseline mode (``prefix_cache=False``: every settle
+re-derives every epoch's share from every span ever submitted, exactly the
+behavior that made thousand-request traces intractable) -- and reports both
+wall times.  The two runs must produce an **identical** ``BatchReport``
+(the cache changes the work, never the answer; asserted here), and at full
+scale the cached run must be at least 5x faster (asserted: the acceptance
+criterion of the arbiter unification).
+
+Also emitted per run: arbiter settle/round counts, how the fast path
+re-simulated (full replays vs. snapshot resumes), and how many spans were
+retired out of the relaxation set.
+
+Results go to ``benchmarks/results/BENCH_online_scaling.json`` -- uploaded
+by CI next to the other benchmark artifacts (CI runs ``--smoke``, which
+checks the identity but not the 5x floor: the quadratic term needs the
+full trace length to dominate).  Measured at the full 1000 requests:
+14.1s cached vs. 1548.9s baseline = **109.5x** -- expect the full run to
+spend ~25 minutes in the baseline; that intractability is precisely what
+the unified arbiter's prefix cache removes.
+
+    PYTHONPATH=src python benchmarks/online_scaling.py [--smoke] [-n N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core.fastsim import SNAP_STRIDE
+from repro.multicore import ChipConfig
+from repro.serving.simbatch import _Batcher, synthetic_trace
+
+from common import RESULTS, emit  # type: ignore
+
+N_FULL = 1000
+N_SMOKE = 100
+MIN_SPEEDUP = 5.0       # acceptance floor, asserted at full scale
+
+#: light per-request shapes: keeps both runs simulation-cheap so the
+#: baseline's quadratic arbiter term is what the comparison measures
+TRACE_KW = dict(seed=0, mean_gap=2, d_model=128, prompt_lens=(16, 32, 64),
+                decode_steps=(1, 2), decode_batch=8)
+CHIP_KW = dict(n_cores=4, design="RASA-WLBP", bw_bytes_per_cycle=32.0,
+               backend="fast")
+
+
+def _run(requests, chip: ChipConfig, prefix_cache: bool):
+    min_share = chip.bw_bytes_per_cycle / (2.0 * chip.n_cores)
+    batcher = _Batcher(requests, chip, "occupancy", 4, min_share,
+                       SNAP_STRIDE, 1, prefix_cache)
+    t0 = time.perf_counter()
+    rep = batcher.run()
+    elapsed = time.perf_counter() - t0
+    sim = batcher.sim
+    return rep, elapsed, {**sim.stats, "n_retired": sim.n_retired}
+
+
+def run(n_requests: int, smoke: bool = False) -> dict:
+    requests = synthetic_trace(n_requests, **TRACE_KW)
+    chip = ChipConfig(**CHIP_KW)
+    rep_on, t_on, stats_on = _run(requests, chip, prefix_cache=True)
+    rep_off, t_off, stats_off = _run(requests, chip, prefix_cache=False)
+
+    assert rep_on == rep_off, \
+        "prefix caching changed the BatchReport -- it may only change the " \
+        "work, never the answer"
+    speedup = t_off / t_on if t_on else float("inf")
+    if n_requests >= N_FULL:
+        # the floor is only meaningful once the baseline's quadratic
+        # arbiter term dominates; short custom -n runs just report
+        assert speedup >= MIN_SPEEDUP, \
+            f"prefix caching must be >= {MIN_SPEEDUP}x faster than the " \
+            f"rebuild-from-epoch-0 baseline at {n_requests} requests " \
+            f"(measured {speedup:.1f}x)"
+
+    table = {
+        "smoke": smoke,
+        "n_requests": n_requests,
+        "chip": {k: v for k, v in CHIP_KW.items()},
+        "trace": {k: list(v) if isinstance(v, tuple) else v
+                  for k, v in TRACE_KW.items()},
+        "prefix_cache_on": {"seconds": t_on, **stats_on},
+        "prefix_cache_off": {"seconds": t_off, **stats_off},
+        "speedup": speedup,
+        "identical_reports": True,
+        "makespan": rep_on.makespan,
+        "p50_latency": rep_on.p50_latency,
+        "p99_latency": rep_on.p99_latency,
+    }
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / "BENCH_online_scaling.json").write_text(
+        json.dumps(table, indent=2))
+    return table
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help=f"small trace ({N_SMOKE} requests, CI smoke run; "
+                         f"checks report identity, not the speedup floor)")
+    ap.add_argument("-n", "--requests", type=int, default=None,
+                    help=f"trace length (default {N_FULL}, "
+                         f"smoke {N_SMOKE})")
+    args = ap.parse_args(argv)
+    n = args.requests or (N_SMOKE if args.smoke else N_FULL)
+    t = run(n, smoke=args.smoke)
+    on, off = t["prefix_cache_on"], t["prefix_cache_off"]
+    print(f"# online arbiter scaling, {n} requests "
+          f"(4 cores, RASA-WLBP, {CHIP_KW['bw_bytes_per_cycle']:.0f} B/cyc)")
+    print(f"{'mode':<24}{'seconds':>10}{'settles':>9}{'rounds':>8}"
+          f"{'resumed':>9}{'retired':>9}")
+    for name, row in (("prefix cache ON", on), ("rebuild from 0", off)):
+        print(f"{name:<24}{row['seconds']:>10.2f}{row['settles']:>9}"
+              f"{row['rounds']:>8}{row['sims_resumed']:>9}"
+              f"{row['n_retired']:>9}")
+    print(f"speedup: {t['speedup']:.1f}x (identical BatchReport: "
+          f"{t['identical_reports']})")
+    emit("online_scaling_prefix_cache", on["seconds"] * 1e6,
+         f"speedup={t['speedup']:.1f};n={n}")
+
+
+if __name__ == "__main__":
+    main()

@@ -781,9 +781,11 @@ def _jax_fns(port_model: bool, emit_ends: bool = False):
 
     # two vmap layouts: `sweep` shares one trace across design lanes (the
     # shared xs keeps every per-step op a cheap scalar-indexed slice);
-    # `cores` gives each lane its own trace under one shared design.
+    # `cores` gives each lane its own trace under one shared design --
+    # with the share schedule per lane (shares / n_shares / tail /
+    # sched_end), which is what weighted epoch arbitration produces.
     _B_SWEEP = ((None,) * 9) + (0,)          # bucket: inv_load per design
-    _B_CORES = (None, None, None, 0) + ((None,) * 6)   # bucket: tail per core
+    _B_CORES = (0, 0, None, 0, None, 0) + ((None,) * 4)
     sweep = jax.jit(jax.vmap(sim_chunk, in_axes=(0, None, None, 0, _B_SWEEP)))
     cores = jax.jit(jax.vmap(sim_chunk, in_axes=(0, 0, None, None, _B_CORES)))
     return sweep, cores
@@ -906,10 +908,14 @@ def _design_scalars(cfg: EngineConfig):
             bool(cfg.pipe))
 
 
-def _bucket_arrays(params: StreamModelParams, inv_load, tail):
-    """The bucket tuple shared by both vmap layouts; ``inv_load`` is an
-    array for design sweeps, ``tail`` an array for core batches."""
-    S = _pow2(max(1, len(params.shares)), lo=4)
+def _bucket_arrays(params: StreamModelParams, inv_load, tail,
+                   pad_to: int | None = None):
+    """The bucket tuple consumed by ``sim_chunk`` -- the single place its
+    field order lives; ``inv_load`` is an array for design sweeps,
+    ``tail`` an array for core batches.  ``pad_to`` overrides the share
+    padding (per-lane stacking needs a common length)."""
+    S = pad_to if pad_to is not None else _pow2(max(1, len(params.shares)),
+                                                lo=4)
     shares = np.zeros(S, dtype=np.float64)
     if params.shares:
         shares[:len(params.shares)] = params.shares
@@ -920,6 +926,29 @@ def _bucket_arrays(params: StreamModelParams, inv_load, tail):
             np.float64(params.burst_bytes), np.float64(params.schedule_end),
             bool(params.charge_store_bytes), bool(store_free),
             np.float64(inv_store), inv_load)
+
+
+#: bucket fields the cores layout maps per lane (must mirror the
+#: ``_B_CORES`` in_axes in ``_jax_fns``): shares, n_shares, tail,
+#: sched_end.
+_BUCKET_LANE_FIELDS = (0, 1, 3, 5)
+
+
+def _bucket_arrays_per_lane(params_list: Sequence[StreamModelParams],
+                            inv_load):
+    """Stack per-lane bucket rows for the cores layout.
+
+    Each lane's row is built by :func:`_bucket_arrays` (so the field
+    layout lives once); the fields ``_B_CORES`` vmaps are stacked, the
+    rest come from lane 0 (``run_cores`` groups lanes so they agree).
+    """
+    S = _pow2(max(1, max(len(p.shares) for p in params_list)), lo=4)
+    rows = [_bucket_arrays(p, inv_load, np.float64(p.tail_share), pad_to=S)
+            for p in params_list]
+    return tuple(
+        np.stack([row[k] for row in rows]) if k in _BUCKET_LANE_FIELDS
+        else rows[0][k]
+        for k in range(len(rows[0])))
 
 
 # --------------------------------------------------------------------------
@@ -1257,14 +1286,16 @@ def sweep_trace(trace: CompiledTrace, cfgs: Sequence[EngineConfig],
             for b, cfg in enumerate(cfgs)]
 
 
-def run_cores(traces: Sequence[CompiledTrace], cfg: EngineConfig,
+def run_cores(traces: Sequence[CompiledTrace],
+              cfg: EngineConfig | Sequence[EngineConfig],
               params: Sequence[StreamModelParams],
               backend: str = "fast") -> list[tuple[TimingResult, float]]:
-    """Simulate one trace per core under a shared engine config.
+    """Simulate one trace per core.
 
-    ``params[i]`` describes core *i*'s arbiter; all cores must share the
-    same schedule/bucket shape (they may differ only in ``tail_share`` --
-    exactly what the epoch arbiter's relaxation produces).  Returns
+    ``cfg`` is one engine config shared by every core, or one per core
+    (heterogeneous chips).  ``params[i]`` describes core *i*'s arbiter;
+    schedules may differ per core in both ``shares`` and ``tail_share`` --
+    exactly what weighted epoch arbitration produces.  Returns
     ``(TimingResult, last_grant)`` per core; ``last_grant`` is the activity
     horizon the chip-level relaxation reads back.
     """
@@ -1272,30 +1303,54 @@ def run_cores(traces: Sequence[CompiledTrace], cfg: EngineConfig,
         raise ValueError("need one StreamModelParams per trace")
     if not traces:
         return []
-    head = params[0]
-    for p in params[1:]:
-        if dataclasses.replace(p, tail_share=head.tail_share) != head:
-            raise ValueError("batched cores must share all stream-model "
-                             "parameters except tail_share")
-    # the per-core layout cannot share instruction arrays across lanes, so
-    # its scan step is gather-bound and only beats the inlined numpy loop
-    # on large batches -- "fast" stays on numpy below that scale (and
-    # always for B=1, which cannot amortize the vmap at all)
-    total = sum(len(t) for t in traces) if len(traces) > 1 else 0
-    concrete = resolve_backend(
-        backend, total if total >= FAST_JAX_MIN_CORES_INSTRS else 0)
-    if concrete == "numpy":
-        return [_run_numpy_params(trace, cfg, p)
-                for trace, p in zip(traces, params)]
+    cfgs = [cfg] * len(traces) if isinstance(cfg, EngineConfig) else list(cfg)
+    if len(cfgs) != len(traces):
+        raise ValueError("need one EngineConfig per trace (or a single "
+                         "shared one)")
+    # a vmapped call can only span batch-compatible lanes -- same engine
+    # config and bucket *shape* (port vs. bucket model, epoch length,
+    # burst, store accounting); shares/tails vary per lane.
+    groups: dict[tuple, list[int]] = {}
+    for i, (c, p) in enumerate(zip(cfgs, params)):
+        key = (c, p.is_port_model, p.epoch_cycles, p.burst_bytes,
+               p.charge_store_bytes, p.load_ports, p.store_ports)
+        groups.setdefault(key, []).append(i)
+    out: list[tuple[TimingResult, float] | None] = [None] * len(traces)
+    for idxs in groups.values():
+        # the per-core layout cannot share instruction arrays across
+        # lanes, so its scan step is gather-bound and only beats the
+        # inlined numpy loop on large batches -- "fast" stays on numpy
+        # below that scale (and always for one lane, which cannot
+        # amortize the vmap at all).  Resolved per *group*: a mixed chip
+        # whose cores split into small per-design groups must not pay one
+        # unamortized vmapped scan per group.
+        total = sum(len(traces[i]) for i in idxs) if len(idxs) > 1 else 0
+        concrete = resolve_backend(
+            backend, total if total >= FAST_JAX_MIN_CORES_INSTRS else 0)
+        if concrete == "numpy":
+            for i in idxs:
+                out[i] = _run_numpy_params(traces[i], cfgs[i], params[i])
+        else:
+            res = _run_cores_jax([traces[i] for i in idxs], cfgs[idxs[0]],
+                                 [params[i] for i in idxs])
+            for i, r in zip(idxs, res):
+                out[i] = r
+    return out  # type: ignore[return-value]
 
+
+def _run_cores_jax(traces: Sequence[CompiledTrace], cfg: EngineConfig,
+                   params: Sequence[StreamModelParams]
+                   ) -> list[tuple[TimingResult, float]]:
+    """The jax cores layout for one batch-compatible lane group."""
     from jax.experimental import enable_x64
+    head = params[0]
     cores_fn = _jax_fns(head.is_port_model)[1]
     n = len(traces)
     lanes = list(traces) + [_empty_trace()] * (_pow2(n, lo=1) - n)
-    tails = np.array([p.tail_share for p in params]
-                     + [head.tail_share] * (len(lanes) - n), dtype=np.float64)
+    pad_p = list(params) + [head] * (len(lanes) - n)
+    bucket = _bucket_arrays_per_lane(pad_p,
+                                     np.float64(1.0 / head.load_ports))
     chunks, idxs = _chunk_batch(lanes)
-    bucket = _bucket_arrays(head, np.float64(1.0 / head.load_ports), tails)
     with enable_x64():
         carry = _init_carry(len(lanes), head.burst_bytes)
         t_end, skips, stall, lg = _run_chunked(

@@ -8,15 +8,23 @@ contention?
 
 Layers
 ------
+:mod:`~repro.multicore.arbiter`
+    The **single** bandwidth-arbitration implementation: a monotone
+    fixed-point relaxation over generic activity spans ``[start, end)``
+    with pluggable share policies (equal / demand-weighted) and a
+    settled-prefix cache.  The closed batch is the "all spans start at
+    epoch 0" special case; the online model staggers the starts.
 :mod:`~repro.multicore.chip`
-    ``ChipConfig`` (cores x design x bandwidth budget x arbitration), the
-    ``EpochBandwidthLoadModel`` epoch-sliced token-bucket arbiter (default)
-    and the ``SharedBandwidthLoadModel`` static-share baseline, both plugged
-    into each core's load/store ports, ``CoreCluster`` (runs one stream per
-    core; for epoch arbitration it relaxes the per-epoch shares to a fixed
-    point), and ``ChipReport`` aggregates (makespan, per-core utilization,
-    bandwidth stalls, per-epoch share/active traces, WLBP hit rate,
-    speedup/efficiency vs. one core).
+    ``ChipConfig`` (a ``CoreSpec`` per core -- one design replicated or a
+    mixed BASE/RASA vector -- x bandwidth budget x arbitration x share
+    policy), the ``EpochBandwidthLoadModel`` epoch-sliced token-bucket
+    arbiter (default) and the ``SharedBandwidthLoadModel`` static-share
+    baseline, both plugged into each core's load/store ports,
+    ``CoreCluster`` (the arbiter's closed-batch client: one stream per
+    core, re-simulations batched through the fast backends), and
+    ``ChipReport`` aggregates (makespan, per-core utilization, bandwidth
+    stalls, per-epoch share/active traces, WLBP hit rate,
+    speedup/efficiency vs. one core, core designs/weights).
 :mod:`~repro.multicore.partition`
     Intra-GEMM parallelism: M-split / N-split / 2D block-cyclic sharding of
     one ``GemmSpec`` into per-core sub-GEMMs (output-space only; K is never
@@ -29,10 +37,11 @@ Layers
     mid-run injection onto already-loaded cores.
 :mod:`~repro.multicore.online`
     Open-arrival form of the chip model: segments of scheduled work
-    arrive and depart at epoch boundaries while the chip is mid-run,
-    arbitrated by the same epoch fixed point over staggered activity
-    spans (drives the serving batcher in :mod:`repro.serving.simbatch`;
-    see ``docs/serving_sim.md``).
+    arrive and depart at epoch boundaries while the chip is mid-run -- a
+    thin incremental client of the same span arbiter, with retired-span
+    pruning for thousand-request serving traces (drives the serving
+    batcher in :mod:`repro.serving.simbatch`; see
+    ``docs/serving_sim.md``).
 
 Modelling assumptions (see ``docs/multicore.md`` for details)
 -------------------------------------------------------------
@@ -54,10 +63,13 @@ Entry point: :func:`simulate_chip` -- pass one ``GemmSpec`` (partitioned) or
 a list of them (scheduled).
 """
 
-from .chip import (ARBITRATIONS, CHIP_BACKENDS, ArbiterTrace, ChipConfig,
-                   ChipReport, CoreCluster, EpochBandwidthLoadModel,
-                   SharedBandwidthLoadModel, build_share_schedule,
-                   partitioned_chip_report, simulate_chip)
+from .arbiter import (MAX_ARBITER_ROUNDS, SHARE_POLICIES, ArbiterTrace,
+                      DemandWeightedShare, SharePolicy, Span, SpanArbiter,
+                      build_share_schedule, get_share_policy)
+from .chip import (ARBITRATIONS, CHIP_BACKENDS, ChipConfig, ChipReport,
+                   CoreCluster, CoreSpec, EpochBandwidthLoadModel,
+                   SharedBandwidthLoadModel, partitioned_chip_report,
+                   simulate_chip)
 from .online import OnlineChip, Segment
 from .partition import PARTITIONERS, partition_gemm, split_ways
 from .scheduler import (SCHEDULERS, assign, assign_incremental,
@@ -65,8 +77,10 @@ from .scheduler import (SCHEDULERS, assign, assign_incremental,
 
 __all__ = [
     "ARBITRATIONS", "CHIP_BACKENDS", "ArbiterTrace", "ChipConfig",
-    "ChipReport", "CoreCluster",
+    "ChipReport", "CoreCluster", "CoreSpec",
     "EpochBandwidthLoadModel", "SharedBandwidthLoadModel",
+    "MAX_ARBITER_ROUNDS", "SHARE_POLICIES", "SharePolicy",
+    "DemandWeightedShare", "Span", "SpanArbiter", "get_share_policy",
     "build_share_schedule", "partitioned_chip_report", "simulate_chip",
     "OnlineChip", "Segment",
     "PARTITIONERS", "partition_gemm", "split_ways",

@@ -1,19 +1,25 @@
 """Chip-level composition: N per-core engines + a shared-memory model.
 
-A ``ChipConfig`` instantiates any :data:`repro.core.designs.DESIGNS` engine
-in every core and throttles the cores' aggregate tile traffic against a
-global bytes/cycle budget.  Two arbitration models are available:
+A ``ChipConfig`` instantiates a :data:`repro.core.designs.DESIGNS` engine
+in every core -- one design replicated, or a mixed BASE/RASA vector of
+:class:`CoreSpec` -- and throttles the cores' aggregate tile traffic
+against a global bytes/cycle budget.  Two arbitration models are
+available:
 
 ``arbitration="epoch"`` (default)
     Time is divided into scheduling epochs of ``epoch_cycles`` engine
     cycles.  Within each epoch every core still drawing on the memory
-    system gets an equal ``bw_bytes_per_cycle / n_active(e)`` share; a core
-    that drains its traffic early *returns its share*, so the survivors'
-    shares grow epoch by epoch.  The per-core share schedule is found by a
-    monotone fixed-point relaxation (see :meth:`CoreCluster._run_epoch`)
-    and enforced per core by a token-bucket
-    :class:`EpochBandwidthLoadModel`.  The resulting per-epoch share/active
-    traces are reported on :class:`ChipReport`.
+    system gets a share of ``bw_bytes_per_cycle`` (equal by default;
+    ``share_policy="demand"`` weights shares by measured bytes/cycle
+    demand); a core that drains its traffic early *returns its share*, so
+    the survivors' shares grow epoch by epoch.  The per-core share
+    schedule is found by the monotone fixed-point relaxation of
+    :class:`repro.multicore.arbiter.SpanArbiter` -- the **single**
+    implementation shared with the open-arrival model
+    (:mod:`repro.multicore.online`); the closed batch is its "all spans
+    start at epoch 0" special case -- and enforced per core by a
+    token-bucket :class:`EpochBandwidthLoadModel`.  The resulting
+    per-epoch share/active traces are reported on :class:`ChipReport`.
 
 ``arbitration="static"``
     The frozen-share model, kept as the comparison baseline: each active
@@ -21,7 +27,8 @@ global bytes/cycle budget.  Two arbitration models are available:
     (:class:`SharedBandwidthLoadModel`, the same token bucket with a
     constant share).  This over-penalizes long-running cores on skewed
     workloads -- bandwidth freed by early finishers is never
-    redistributed.
+    redistributed.  Always equal-share: it predates (and baselines) the
+    share policies.
 
 In both models bursts up to ``bw_burst_bytes`` ride the core's LSQ at full
 port rate, the excess wait is accounted as bandwidth-stall cycles, and --
@@ -39,10 +46,13 @@ from typing import Sequence
 
 from ..core.designs import EngineConfig, get_design
 from ..core.fastsim import StreamModelParams, run_cores
-from ..core.isa import Instr, Op
+from ..core.isa import Instr, Op, tile_bytes
 from ..core.tiling import (ALG1_POLICY, GemmSpec, RegPolicy, lowered_stream)
 from ..core.timing import LoadStreamModel, PipelineSimulator, TimingResult
-from ..core.trace import CompiledTrace, compile_stream, compiled_trace
+from ..core.trace import (OP_TL, OP_TS, CompiledTrace, compile_stream,
+                          compiled_trace)
+from .arbiter import (ArbiterTrace, SharePolicy, Span, SpanArbiter,
+                      get_share_policy)
 from .partition import partition_gemm
 
 ARBITRATIONS = ("epoch", "static")
@@ -52,19 +62,17 @@ ARBITRATIONS = ("epoch", "static")
 #: jax when available and worthwhile, numpy otherwise).
 CHIP_BACKENDS = ("reference", "fast", "numpy", "jax")
 
-#: relaxation-round cap for the epoch arbiter; the monotone iteration
-#: converges in a handful of rounds, this only guards pathological streams.
-MAX_ARBITER_ROUNDS = 32
 
-
-def stream_model_params(chip: "ChipConfig", shares: Sequence[float] = (),
+def stream_model_params(chip: "ChipConfig", engine: EngineConfig,
+                        shares: Sequence[float] = (),
                         epoch_cycles: float = math.inf,
                         tail: float = math.inf) -> StreamModelParams:
-    """The chip's arbiter as fast-backend parameters (default: the
-    unthrottled port model).  Shared by the closed-batch cluster and the
-    online model."""
+    """The chip's arbiter as fast-backend parameters for one core's
+    ``engine`` (default: the unthrottled port model).  Shared by the
+    closed-batch cluster and the online model."""
+    store_ports = engine.store_ports if chip.store_bytes_shared else None
     return StreamModelParams(
-        chip.engine.load_ports, chip.store_ports, tuple(shares),
+        engine.load_ports, store_ports, tuple(shares),
         epoch_cycles, tail, chip.bw_burst_bytes, chip.store_bytes_shared)
 
 
@@ -78,26 +86,22 @@ def demands_bandwidth(chip: "ChipConfig", stream: Sequence[Instr] | None,
                for ins in stream)
 
 
-def build_share_schedule(spans: Sequence[tuple[int, int | None]],
-                         budget: float) -> tuple[list[float], list[int]]:
-    """Per-epoch ``(share, n_active)`` from activity spans ``[start, end)``.
-
-    ``spans[i]`` is the half-open epoch interval during which consumer *i*
-    draws on the shared ``budget`` (``end=None`` = active indefinitely --
-    the opening relaxation round's assumption).  Epoch *e*'s share is
-    ``budget / n_active(e)`` over the spans containing *e*; the schedule is
-    built up to the largest finite end.  The closed-batch arbiter passes
-    ``start=0`` spans; the open-arrival model
-    (:mod:`repro.multicore.online`) staggers the starts as scheduled work
-    arrives and departs at epoch boundaries.
-    """
-    horizon = max((e for _, e in spans if e is not None), default=0)
-    shares, n_active = [], []
-    for e in range(horizon):
-        n = sum(1 for s, h in spans if s <= e and (h is None or h > e))
-        shares.append(budget / n if n else budget)
-        n_active.append(n)
-    return shares, n_active
+def shared_traffic_bytes(chip: "ChipConfig",
+                         stream: Sequence[Instr] | None,
+                         trace: CompiledTrace | None = None) -> float:
+    """Total bytes this stream puts on the shared memory system (tile
+    loads, plus ``rasa_ts`` stores when they are charged) -- the numerator
+    of the demand-weighted share policy's bytes/cycle measurement."""
+    if trace is not None:
+        total = float(trace.nbytes[trace.opcode == OP_TL].sum())
+        if chip.store_bytes_shared:
+            total += float(trace.nbytes[trace.opcode == OP_TS].sum())
+        return total
+    total = 0.0
+    for ins in stream:
+        if ins.op is Op.TL or (chip.store_bytes_shared and ins.op is Op.TS):
+            total += tile_bytes(ins)
+    return total
 
 
 class EpochBandwidthLoadModel(LoadStreamModel):
@@ -248,26 +252,32 @@ class SharedBandwidthLoadModel(EpochBandwidthLoadModel):
 
 
 @dataclasses.dataclass(frozen=True)
-class ArbiterTrace:
-    """Per-epoch outcome of the dynamic arbitration fixed point."""
+class CoreSpec:
+    """One core's configuration in a (possibly mixed) chip.
 
-    epoch_cycles: float
-    #: bytes/cycle granted to each *active* core, per epoch
-    shares: tuple[float, ...]
-    #: number of cores still drawing on the budget, per epoch
-    n_active: tuple[int, ...]
-    #: relaxation rounds until the activity horizons converged
-    rounds: int
-    #: per relaxation round, how many cores were *not* re-simulated because
-    #: the share schedule they can observe (their prefix of ``shares`` plus
-    #: their tail) was unchanged since their last simulation -- results are
-    #: deterministic in the visible schedule, so those rounds are skipped.
-    skipped: tuple[int, ...] = ()
+    The unit of heterogeneity: a :class:`ChipConfig` carries one
+    ``CoreSpec`` per core, so BASE and RASA(-DM/-WLBP/...) cores can share
+    one chip and flow together through the partitioners, both arbiters,
+    all simulation backends, and :class:`ChipReport`.
+    """
+
+    design: str
+    policy: RegPolicy = ALG1_POLICY
+
+    @property
+    def engine(self) -> EngineConfig:
+        return get_design(self.design)
 
 
 @dataclasses.dataclass(frozen=True)
 class ChipConfig:
-    """A CMP of ``n_cores`` identical RASA-equipped cores.
+    """A CMP of RASA-equipped cores sharing one memory system.
+
+    By default all ``n_cores`` cores replicate ``design``/``policy``; pass
+    ``cores`` -- a tuple of :class:`CoreSpec` (or design-name strings) --
+    for a heterogeneous mix, in which case ``cores`` is authoritative:
+    ``n_cores`` is derived from it (or must match it if given) and
+    ``design``/``policy`` only serve as defaults for string entries.
 
     ``bw_bytes_per_cycle`` is the chip-wide tile-traffic budget in bytes per
     *engine* cycle; the default 256 B/cyc corresponds to 128 GB/s at the
@@ -277,11 +287,14 @@ class ChipConfig:
 
     ``arbitration`` selects the contention model (``"epoch"`` dynamic
     time-sliced shares recomputed every ``epoch_cycles``; ``"static"`` the
-    frozen equal-share baseline).  ``store_bytes_shared=False`` recovers the
-    PR-1 loads-only accounting where ``rasa_ts`` stores are free.
+    frozen equal-share baseline).  ``share_policy`` selects how the epoch
+    arbiter splits each epoch's budget over the active cores (``"equal"``
+    or ``"demand"``; see :mod:`repro.multicore.arbiter`).
+    ``store_bytes_shared=False`` recovers the PR-1 loads-only accounting
+    where ``rasa_ts`` stores are free.
     """
 
-    n_cores: int = 4
+    n_cores: int | None = None
     design: str = "RASA-DMDB-WLS"
     bw_bytes_per_cycle: float = 256.0
     bw_burst_bytes: float = 16384.0
@@ -292,10 +305,13 @@ class ChipConfig:
     #: simulation backend (see :data:`CHIP_BACKENDS`); "reference" keeps the
     #: per-core Python loop as the exactness oracle.
     backend: str = "fast"
+    #: epoch-share policy (see :data:`repro.multicore.arbiter.
+    #: SHARE_POLICIES`); normalized to a SharePolicy instance.
+    share_policy: str | SharePolicy = "equal"
+    #: per-core design vector; ``None`` replicates ``design``/``policy``.
+    cores: tuple | None = None
 
     def __post_init__(self):
-        if self.n_cores < 1:
-            raise ValueError("need at least one core")
         if self.backend not in CHIP_BACKENDS:
             raise ValueError(f"unknown backend {self.backend!r}; "
                              f"available: {CHIP_BACKENDS}")
@@ -309,16 +325,94 @@ class ChipConfig:
                              f"available: {ARBITRATIONS}")
         if not self.epoch_cycles > 0:
             raise ValueError("epoch_cycles must be > 0")
+        object.__setattr__(self, "share_policy",
+                           get_share_policy(self.share_policy))
+        if self.cores is None:
+            # the field stays None so dataclasses.replace(design=...) or
+            # replace(n_cores=...) re-derives the replicated vector; the
+            # resolved form is the core_specs property
+            n = 4 if self.n_cores is None else self.n_cores
+        else:
+            cores = tuple(CoreSpec(c, self.policy) if isinstance(c, str)
+                          else c for c in self.cores)
+            if not cores:
+                raise ValueError("need at least one core")
+            n = len(cores) if self.n_cores is None else self.n_cores
+            if n != len(cores):
+                raise ValueError(f"n_cores={n} does not match "
+                                 f"len(cores)={len(cores)}")
+            object.__setattr__(self, "cores", cores)
+        if n < 1:
+            raise ValueError("need at least one core")
+        object.__setattr__(self, "n_cores", n)
+        for spec in self.core_specs:
+            spec.engine             # fail fast on unknown design names
+
+    @property
+    def core_specs(self) -> tuple[CoreSpec, ...]:
+        """The resolved per-core vector: ``cores`` as given, or
+        ``design``/``policy`` replicated ``n_cores`` times."""
+        if self.cores is not None:
+            return self.cores
+        cached = self.__dict__.get("_core_specs")
+        if cached is None:
+            cached = (CoreSpec(self.design, self.policy),) * self.n_cores
+            object.__setattr__(self, "_core_specs", cached)
+        return cached
+
+    @property
+    def homogeneous(self) -> bool:
+        specs = self.core_specs
+        return all(spec == specs[0] for spec in specs)
 
     @property
     def engine(self) -> EngineConfig:
-        return get_design(self.design)
+        """The chip's engine when every core shares one design.
+
+        Heterogeneous chips have no single engine -- use
+        :meth:`core_engine` there; raising here catches call sites that
+        silently assumed homogeneity.
+        """
+        designs = {spec.design for spec in self.core_specs}
+        if len(designs) > 1:
+            raise ValueError("heterogeneous chip has no single engine; "
+                             "use core_engine(core)")
+        return self.core_specs[0].engine
+
+    def core_engine(self, core: int) -> EngineConfig:
+        return self.core_specs[core].engine
+
+    @property
+    def design_name(self) -> str:
+        """Report label: the engine name, or a mix summary."""
+        if len({spec.design for spec in self.core_specs}) == 1:
+            return self.core_specs[0].engine.name
+        runs: list[list] = []
+        for spec in self.core_specs:
+            if runs and runs[-1][0] == spec.design:
+                runs[-1][1] += 1
+            else:
+                runs.append([spec.design, 1])
+        return "mixed[" + "+".join(f"{d}x{k}" if k > 1 else d
+                                   for d, k in runs) + "]"
 
     @property
     def store_ports(self) -> int | None:
         """Store-port count handed to the arbiter models (None = stores
-        free, the loads-only accounting switch)."""
+        free, the loads-only accounting switch).  Homogeneous chips only;
+        per-core form: :meth:`store_ports_for`."""
         return self.engine.store_ports if self.store_bytes_shared else None
+
+    def store_ports_for(self, core: int) -> int | None:
+        return self.core_specs[core].engine.store_ports \
+            if self.store_bytes_shared else None
+
+    def single_core(self, core: int = 0) -> "ChipConfig":
+        """The one-core chip running this chip's ``core`` spec (the
+        reference configuration speedups are measured against)."""
+        spec = self.core_specs[core]
+        return dataclasses.replace(self, n_cores=1, cores=(spec,),
+                                   design=spec.design, policy=spec.policy)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -345,16 +439,26 @@ class ChipReport:
     arbitration: str = "static"
     #: scheduling-epoch length in engine cycles (0 for the static model)
     epoch_cycles: float = 0.0
-    #: bytes/cycle granted to each active core, per epoch (static: one
-    #: entry covering the whole run)
+    #: bytes/cycle granted per unit arbitration weight, per epoch (equal
+    #: shares: exactly the bytes/cycle each active core receives; static:
+    #: one entry covering the whole run).  Core *i* receives
+    #: ``share_trace[e] * core_weights[i]``.
     share_trace: tuple[float, ...] = ()
     #: cores still drawing on the shared budget, per epoch
     active_trace: tuple[int, ...] = ()
     #: relaxation rounds the epoch arbiter needed (1 for static)
     arb_rounds: int = 1
     #: per relaxation round, cores skipped because their visible share
-    #: schedule was unchanged (see :class:`ArbiterTrace`)
+    #: schedule was unchanged (see :class:`repro.multicore.arbiter.
+    #: ArbiterTrace`)
     arb_skipped: tuple[int, ...] = ()
+    #: per-core design names (the CoreSpec vector; all equal on a
+    #: homogeneous chip)
+    core_designs: tuple[str, ...] = ()
+    #: epoch-share policy of the arbiter ("equal" or "demand")
+    share_policy: str = "equal"
+    #: per-core arbitration weights (all 1 under equal shares)
+    core_weights: tuple[float, ...] = ()
 
     @property
     def speedup(self) -> float:
@@ -396,10 +500,19 @@ class ChipReport:
 
 
 class CoreCluster:
-    """Runs one instruction stream per core under the shared-memory model."""
+    """Runs one instruction stream per core under the shared-memory model.
+
+    The epoch arbitration itself lives in
+    :class:`repro.multicore.arbiter.SpanArbiter`; this class is its
+    closed-batch client -- it owns the per-core streams/traces, batches
+    the arbiter's re-simulation requests through the fast backends, and
+    measures contention stalls.
+    """
 
     def __init__(self, chip: ChipConfig):
         self.chip = chip
+        #: per-core arbitration weights of the last run (all 1 for equal)
+        self.core_weights: tuple[float, ...] = ()
 
     def run_streams(self, streams: Sequence[Sequence[Instr]] | None,
                     traces: Sequence[CompiledTrace] | None = None
@@ -432,41 +545,44 @@ class CoreCluster:
         return self._run_epoch(streams, traces)
 
     # -- shared helpers ----------------------------------------------------
-    def _params(self, shares: Sequence[float] = (),
+    def _params(self, core: int, shares: Sequence[float] = (),
                 epoch_cycles: float = math.inf,
                 tail: float = math.inf) -> StreamModelParams:
-        return stream_model_params(self.chip, shares, epoch_cycles, tail)
+        return stream_model_params(self.chip, self.chip.core_specs[core].engine,
+                                   shares, epoch_cycles, tail)
 
-    def _sim_round(self, streams, traces,
+    def _sim_round(self, idxs: Sequence[int], streams, traces,
                    params: Sequence[StreamModelParams]
                    ) -> list[tuple[TimingResult, float]]:
-        """Simulate the given cores under their arbiter parameters,
-        returning ``(TimingResult, last_grant)`` per core.
+        """Simulate the given cores (by index) under their arbiter
+        parameters, returning ``(TimingResult, last_grant)`` per core.
 
-        Cores that share a compiled trace *and* identical arbiter
+        ``streams``/``traces`` are parallel to ``idxs``.  Cores that share
+        a compiled trace, an engine config *and* identical arbiter
         parameters (symmetric shards under equal shares) are simulated
         once and fan the result out -- results are deterministic in
-        (trace, params).
+        (trace, engine, params).
         """
-        cfg = self.chip.engine
+        cfgs = [self.chip.core_specs[i].engine for i in idxs]
         if self.chip.backend == "reference":
             out = []
-            for stream, p in zip(streams, params):
+            for cfg, stream, p in zip(cfgs, streams, params):
                 model = p.make_model()
                 res = PipelineSimulator(cfg, load_model=model).run(stream)
                 out.append((res, model.last_grant))
             return out
         slot: dict[tuple, int] = {}
-        todo_t, todo_p = [], []
+        todo_t, todo_c, todo_p = [], [], []
         lanes = []
-        for t, p in zip(traces, params):
-            key = (id(t), p)
+        for t, c, p in zip(traces, cfgs, params):
+            key = (id(t), c, p)
             if key not in slot:
                 slot[key] = len(todo_t)
                 todo_t.append(t)
+                todo_c.append(c)
                 todo_p.append(p)
             lanes.append(slot[key])
-        uniq = run_cores(todo_t, cfg, todo_p, backend=self.chip.backend)
+        uniq = run_cores(todo_t, todo_c, todo_p, backend=self.chip.backend)
         return [uniq[k] for k in lanes]
 
     def _demands_bandwidth(self, stream: Sequence[Instr] | None,
@@ -480,30 +596,61 @@ class CoreCluster:
                                         traces[i] if traces else None)
                 for i in range(n)]
 
+    def _demand_weights(self, streams, traces, demand,
+                        unthrottled: dict[int, TimingResult]
+                        ) -> list[float]:
+        """Per-core arbitration weights for the chip's share policy.
+
+        Equal shares weigh every core 1 with no extra work; the demand
+        policy measures each demanding core's unthrottled bytes/cycle
+        (one batched unthrottled round, reused as the contention-stall
+        baseline via ``unthrottled``).
+        """
+        n = len(demand)
+        policy = self.chip.share_policy
+        if not policy.needs_demand:
+            return [1.0] * n
+        idxs = [i for i in range(n) if demand[i]]
+        weights = [1.0] * n
+        if not idxs:
+            return weights
+        outs = self._sim_round(
+            idxs, [streams[i] for i in idxs] if streams else None,
+            [traces[i] for i in idxs] if traces else None,
+            [self._params(i) for i in idxs])
+        for i, (res, _) in zip(idxs, outs):
+            unthrottled[i] = res
+            traffic = shared_traffic_bytes(
+                self.chip, streams[i] if streams else None,
+                traces[i] if traces else None)
+            weights[i] = policy.weight(traffic / res.cycles
+                                       if res.cycles else 0.0)
+        return weights
+
     def _contention_stalls(self, streams, traces,
-                           results: Sequence[TimingResult]) -> list[float]:
+                           results: Sequence[TimingResult],
+                           unthrottled: dict[int, TimingResult] | None = None
+                           ) -> list[float]:
         """End-to-end cycles each core lost to the bandwidth throttle.
 
         Cores whose arbiter never delayed an access ran identically to an
         unthrottled core, so only the stalled subset is re-simulated --
-        batched through the fast backend when one is selected.
+        batched through the fast backend when one is selected, and reusing
+        any ``unthrottled`` baselines already measured (demand weighing).
         """
         stalls = [0.0] * len(results)
+        pre = unthrottled or {}
+        for i, base in pre.items():
+            if results[i].load_stall_cycles != 0.0:
+                stalls[i] = max(0.0, results[i].cycles - base.cycles)
         idxs = [i for i, r in enumerate(results)
-                if r.load_stall_cycles != 0.0]
+                if r.load_stall_cycles != 0.0 and i not in pre]
         if not idxs:
             return stalls
-        cfg = self.chip.engine
-        free = StreamModelParams(cfg.load_ports, self.chip.store_ports)
-        if self.chip.backend == "reference":
-            for i in idxs:
-                model = free.make_model()
-                res = PipelineSimulator(cfg, load_model=model) \
-                    .run(streams[i])
-                stalls[i] = max(0.0, results[i].cycles - res.cycles)
-            return stalls
-        outs = self._sim_round(None, [traces[i] for i in idxs],
-                               [free] * len(idxs))
+        outs = self._sim_round(
+            idxs, [streams[i] for i in idxs] if streams else None,
+            [traces[i] for i in idxs] if traces else None,
+            [self._params(i) for i in idxs])
         for i, (res, _) in zip(idxs, outs):
             stalls[i] = max(0.0, results[i].cycles - res.cycles)
         return stalls
@@ -514,101 +661,52 @@ class CoreCluster:
         demand = self._demand_vector(streams, traces)
         n_active = sum(demand) or 1
         share = chip.bw_bytes_per_cycle / n_active
-        params = [self._params(tail=share)] * len(demand)
-        results = [r for r, _ in self._sim_round(streams, traces, params)]
+        idxs = list(range(len(demand)))
+        params = [self._params(i, tail=share) for i in idxs]
+        results = [r for r, _ in self._sim_round(idxs, streams, traces,
+                                                 params)]
         stalls = self._contention_stalls(streams, traces, results)
+        self.core_weights = (1.0,) * len(demand)
         trace = ArbiterTrace(epoch_cycles=0.0, shares=(share,),
                              n_active=(n_active,), rounds=1)
         return results, stalls, trace
 
-    # -- epoch-based dynamic arbitration (the fixed model) -----------------
-    def _build_schedule(self, end_epoch: Sequence[int | None]
-                        ) -> tuple[list[float], list[int]]:
-        """Per-epoch (share, n_active) from the cores' activity horizons.
-
-        ``end_epoch[i]`` is the first epoch in which core *i* no longer
-        draws on the budget (None = active indefinitely, used by the
-        opening relaxation round).  Closed-batch special case of
-        :func:`build_share_schedule` -- every core starts at epoch 0.
-        """
-        return build_share_schedule([(0, e) for e in end_epoch],
-                                    self.chip.bw_bytes_per_cycle)
-
+    # -- epoch-based dynamic arbitration -----------------------------------
     def _run_epoch(self, streams, traces):
+        """The closed batch as the arbiter's "all spans start at 0" case.
+
+        The relaxation itself -- schedule building, skip rules,
+        convergence -- lives in :class:`SpanArbiter`; this method only
+        owns the per-core inputs and batches the re-simulation requests.
+        """
         chip = self.chip
         E = chip.epoch_cycles
-        budget = chip.bw_bytes_per_cycle
         demand = self._demand_vector(streams, traces)
         n = len(demand)
+        unthrottled: dict[int, TimingResult] = {}
+        weights = self._demand_weights(streams, traces, demand, unthrottled)
+        spans = [Span(start=0, end=None if d else 0, demands=d, weight=w)
+                 for d, w in zip(demand, weights)]
+        results: list[TimingResult | None] = [None] * n
 
-        # Opening round: every demanding core is assumed active forever,
-        # which makes the schedule the static equal-share model.  Each
-        # round simulates the cores under the current schedule, reads off
-        # when each core's last access was granted, and shrinks the
-        # activity horizons accordingly; shrinking horizons only ever
-        # *raise* later epochs' shares, so finish times -- and with them
-        # the horizons -- decrease monotonically until the fixed point.
-        #
-        # A core only observes ``shares[:end_epoch[i]]`` plus its tail
-        # (monotonicity keeps its grants inside that prefix), and results
-        # are deterministic in that visible schedule -- so a core whose
-        # visible schedule did not change since it was last simulated is
-        # skipped, its cached result reused (counted in ``skipped``).
-        end_epoch: list[int | None] = [None if d else 0 for d in demand]
-        n_forever = sum(1 for e in end_epoch if e is None)
-        tail = budget / n_forever if n_forever else budget
+        def simulate(jobs):
+            idxs = [i for i, _, _ in jobs]
+            params = [self._params(i, prefix, E, tail)
+                      for i, prefix, tail in jobs]
+            outs = self._sim_round(
+                idxs, [streams[i] for i in idxs] if streams else None,
+                [traces[i] for i in idxs] if traces else None, params)
+            for (i, _, _), (res, lg) in zip(jobs, outs):
+                results[i] = res
+                spans[i].last_grant = lg
+                spans[i].throttled = res.load_stall_cycles != 0.0
 
-        cached: list[tuple[TimingResult, float] | None] = [None] * n
-        last_vis: list[tuple | None] = [None] * n
-        skipped: list[int] = []
-        rounds = 0
-        shares: list[float] = []
-        n_active: list[int] = []
-        # the reference backend is the literal oracle: it re-simulates every
-        # core every round, so the skip logic can be validated against it
-        oracle = self.chip.backend == "reference"
-        for rounds in range(1, MAX_ARBITER_ROUNDS + 1):
-            shares, n_active = self._build_schedule(end_epoch)
-            need: list[tuple[int, float]] = []
-            for i in range(n):
-                h = end_epoch[i]
-                vis = (tuple(shares) if h is None else tuple(shares[:h]),
-                       tail if h is None else budget)
-                # a core the arbiter never delayed runs identically under
-                # any pointwise-larger schedule -- its result is final
-                unthrottled = (cached[i] is not None
-                               and cached[i][0].load_stall_cycles == 0.0)
-                if oracle or cached[i] is None or (last_vis[i] != vis
-                                                   and not unthrottled):
-                    need.append((i, vis[1]))
-                    last_vis[i] = vis
-            skipped.append(n - len(need))
-            if need:
-                params = [self._params(shares, E, tail_i)
-                          for _, tail_i in need]
-                sub_s = [streams[i] for i, _ in need] if streams else None
-                sub_t = [traces[i] for i, _ in need] if traces else None
-                for (i, _), ro in zip(need,
-                                      self._sim_round(sub_s, sub_t, params)):
-                    cached[i] = ro
-            new_end: list[int | None] = []
-            for i in range(n):
-                if not demand[i]:
-                    new_end.append(0)
-                else:
-                    e = int(cached[i][1] // E) + 1      # type: ignore[index]
-                    prev = end_epoch[i]
-                    new_end.append(e if prev is None else min(prev, e))
-            if new_end == end_epoch:
-                break
-            end_epoch = new_end
-            tail = budget     # all horizons finite from round 2 on
-
-        results = [c[0] for c in cached]                # type: ignore[index]
-        stalls = self._contention_stalls(streams, traces, results)
-        trace = ArbiterTrace(epoch_cycles=E, shares=tuple(shares),
-                             n_active=tuple(n_active), rounds=rounds,
-                             skipped=tuple(skipped))
+        arb = SpanArbiter(chip.bw_bytes_per_cycle, E, chip.share_policy,
+                          oracle=chip.backend == "reference")
+        trace = arb.relax(spans, simulate)
+        self.core_weights = tuple(weights)
+        stalls = self._contention_stalls(streams, traces, results,
+                                         unthrottled)
         return results, stalls, trace
 
 
@@ -628,26 +726,29 @@ def _streams_traces(chip: ChipConfig, shards: Sequence[Sequence[GemmSpec]]):
     dims, so the equal-dim shards a symmetric partitioner emits ("x@c0",
     "x@c1", ...) share one compiled trace -- and, downstream, one
     simulation per arbiter round (see ``CoreCluster._sim_round``).
+    Lowering runs under each core's own register policy.
     """
     if chip.backend == "reference":
-        return [_lower_many(shard, chip.policy) for shard in shards], None
+        return [_lower_many(shard, chip.core_specs[i].policy)
+                for i, shard in enumerate(shards)], None
     return None, [
         compiled_trace(tuple(dataclasses.replace(s, name="")
-                             for s in shard), chip.policy)
-        for shard in shards]
+                             for s in shard), chip.core_specs[i].policy)
+        for i, shard in enumerate(shards)]
 
 
 def _aggregate(chip: ChipConfig, workload_name: str, strategy: str,
                shards: Sequence[Sequence[GemmSpec]],
                results: Sequence[TimingResult], stalls: Sequence[float],
                single_core_cycles: float,
-               trace: ArbiterTrace | None = None) -> ChipReport:
+               trace: ArbiterTrace | None = None,
+               core_weights: tuple[float, ...] = ()) -> ChipReport:
     cycles = max((r.cycles for r in results), default=0.0)
-    peak = chip.engine.peak_macs_per_cycle
+    peak = sum(spec.engine.peak_macs_per_cycle for spec in chip.core_specs)
     chip_util = (sum(r.useful_macs for r in results)
-                 / (cycles * peak * chip.n_cores)) if cycles else 0.0
+                 / (cycles * peak)) if cycles else 0.0
     return ChipReport(
-        design=chip.engine.name,
+        design=chip.design_name,
         workload=workload_name,
         strategy=strategy,
         n_cores=chip.n_cores,
@@ -667,30 +768,40 @@ def _aggregate(chip: ChipConfig, workload_name: str, strategy: str,
         active_trace=trace.n_active if trace else (),
         arb_rounds=trace.rounds if trace else 1,
         arb_skipped=trace.skipped if trace else (),
+        core_designs=tuple(spec.design for spec in chip.core_specs),
+        # static arbitration is the frozen *equal*-share baseline
+        # regardless of the configured policy (see _run_static)
+        share_policy=chip.share_policy.name
+        if chip.arbitration == "epoch" else "equal",
+        core_weights=tuple(core_weights),
     )
 
 
 @functools.lru_cache(maxsize=1024)
 def _single_core_cycles_cached(chip: ChipConfig,
                                specs: tuple[GemmSpec, ...]) -> float:
-    cfg = chip.engine
+    spec0 = chip.core_specs[0]
+    cfg = spec0.engine
     params = StreamModelParams(
-        cfg.load_ports, chip.store_ports, (), math.inf,
+        cfg.load_ports, chip.store_ports_for(0), (), math.inf,
         chip.bw_bytes_per_cycle, chip.bw_burst_bytes,
         chip.store_bytes_shared)
     if chip.backend == "reference":
         sim = PipelineSimulator(cfg, load_model=params.make_model())
-        return sim.run(_lower_many(specs, chip.policy)).cycles
+        return sim.run(_lower_many(specs, spec0.policy)).cycles
     trace = compiled_trace(tuple(dataclasses.replace(s, name="")
-                                 for s in specs), chip.policy)
+                                 for s in specs), spec0.policy)
     return run_cores([trace], cfg, [params],
                      backend=chip.backend)[0][0].cycles
 
 
 def _single_core_cycles(chip: ChipConfig, specs: Sequence[GemmSpec]) -> float:
-    """Reference: all work on one core with the full bandwidth budget."""
-    return _single_core_cycles_cached(dataclasses.replace(chip, n_cores=1),
-                                      tuple(specs))
+    """Reference: all work on one core with the full bandwidth budget.
+
+    Mixed chips are referenced against their core-0 spec (document the
+    mix you compare against by ordering ``cores`` accordingly).
+    """
+    return _single_core_cycles_cached(chip.single_core(), tuple(specs))
 
 
 def partitioned_chip_report(spec: GemmSpec, chip: ChipConfig,
@@ -698,9 +809,11 @@ def partitioned_chip_report(spec: GemmSpec, chip: ChipConfig,
     """Shard one GEMM across the chip's cores and report scaling."""
     shards = partition_gemm(spec, chip.n_cores, strategy)
     streams, traces = _streams_traces(chip, shards)
-    results, stalls, trace = CoreCluster(chip).run_streams(streams, traces)
+    cluster = CoreCluster(chip)
+    results, stalls, trace = cluster.run_streams(streams, traces)
     return _aggregate(chip, spec.name, strategy, shards, results, stalls,
-                      _single_core_cycles(chip, [spec]), trace)
+                      _single_core_cycles(chip, [spec]), trace,
+                      cluster.core_weights)
 
 
 def simulate_chip(workload, chip: ChipConfig | None = None, *,

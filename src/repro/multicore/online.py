@@ -6,8 +6,10 @@ every core's stream up front and relaxes one share schedule over it.  The
 serving question -- how many concurrent requests does the shared memory
 system sustain? -- needs the *open* form: requests are injected while other
 cores are mid-flight, and a request that drains returns its bandwidth to
-the survivors.  :class:`OnlineChip` provides exactly that, as an
-event-driven extension of the same epoch arbiter:
+the survivors.  :class:`OnlineChip` provides exactly that, as a **thin
+incremental client** of the unified span arbiter
+(:class:`repro.multicore.arbiter.SpanArbiter` -- the same fixed point the
+closed batch uses, with staggered span starts):
 
 * A **segment** (one or more :class:`~repro.core.tiling.GemmSpec` lowered
   back to back -- e.g. one serving request's prefill GEMM plus its decode
@@ -16,18 +18,25 @@ event-driven extension of the same epoch arbiter:
   which it is free.  Engine and LSQ/bucket state are fresh per segment:
   the chip hands work to cores at scheduling-epoch granularity, and the
   engine synchronizes between requests (different requests share no tile
-  registers).
-* **Bandwidth** is arbitrated by the PR-2 epoch fixed point, generalized
-  to staggered activity spans ``[start, end)``
-  (:func:`repro.multicore.chip.build_share_schedule`): epoch *e*'s equal
-  share is recomputed over the segments active in *e*, so arrivals shrink
-  the survivors' shares and departures return them.
+  registers).  On a heterogeneous chip each segment runs on its core's
+  own :class:`~repro.multicore.chip.CoreSpec` engine.
+* **Bandwidth** is arbitrated by the span fixed point: epoch *e*'s share
+  is recomputed over the segments active in *e* (weighted by the chip's
+  ``share_policy``), so arrivals shrink the survivors' shares and
+  departures return them.
 * **Causality** makes the whole construction incremental: a segment's
   timing depends only on shares in epochs it overlaps, so an event at
   epoch *t* (arrival or start) can change shares only from *t* on --
   everything that finished before *t* is a settled fact.  Arrivals mark
-  every in-flight segment dirty and the monotone relaxation re-runs for
-  the dirty set alone.
+  every in-flight segment dirty and the relaxation re-runs for the dirty
+  set alone; the arbiter's **settled-prefix cache** keeps the share
+  schedule below ``dirty_from`` verbatim, and segments whose span closed
+  at or before the clock are *retired* -- pruned out of the relaxation
+  set entirely, their contribution living on in the cached prefix.  This
+  is what makes thousand-request serving traces tractable: per-settle
+  work scales with the in-flight segments, not the whole history
+  (``prefix_cache=False`` keeps the rebuild-from-epoch-0 baseline for
+  ``benchmarks/online_scaling.py``).
 
 Backends follow the chip model's contract: ``backend="reference"`` is the
 oracle (each re-simulation replays the full stream through
@@ -57,18 +66,20 @@ from ..core.fastsim import SNAP_STRIDE, SimCarry, run_segment
 from ..core.tiling import GemmSpec
 from ..core.timing import PipelineSimulator, TimingResult
 from ..core.trace import CompiledTrace, compiled_trace
-from .chip import (MAX_ARBITER_ROUNDS, ChipConfig, _lower_many,
-                   build_share_schedule, demands_bandwidth,
-                   stream_model_params)
+from .arbiter import Span, SpanArbiter
+from .chip import (ChipConfig, _lower_many, demands_bandwidth,
+                   shared_traffic_bytes, stream_model_params)
 
 
 @dataclasses.dataclass(eq=False)
 class Segment:
     """One unit of scheduled work on one core (handle; identity-hashed).
 
-    ``start``/``end`` are absolute epochs: the boundary at which the core
-    picked the segment up, and the first epoch in which it no longer draws
-    on the shared budget (``None`` while queued / unsettled).
+    The segment's activity on the shared budget is its :attr:`span`
+    (created when the core picks the segment up); :attr:`start` and
+    :attr:`end` expose the span's absolute epochs -- the boundary at which
+    the segment started, and the first epoch in which it no longer draws
+    on the budget (``None`` while queued / unsettled).
     """
 
     sid: int
@@ -76,19 +87,22 @@ class Segment:
     specs: tuple[GemmSpec, ...]
     submit_epoch: int
     demands: bool = True
-    start: int | None = None
-    end: int | None = None
+    weight: float = 1.0
+    span: Span | None = dataclasses.field(default=None, repr=False)
     # -- cached simulation state (managed by OnlineChip) --
     stream: tuple | None = dataclasses.field(default=None, repr=False)
     trace: CompiledTrace | None = dataclasses.field(default=None, repr=False)
     result: TimingResult | None = dataclasses.field(default=None, repr=False)
-    last_grant: float = 0.0            # local cycles from the start boundary
-    _vis: tuple | None = dataclasses.field(default=None, repr=False)
     _snaps: list[SimCarry] = dataclasses.field(default_factory=list,
                                                repr=False)
-    #: settle pass of the last simulation (the unthrottled skip is valid
-    #: only within one settle -- see OnlineChip._settle)
-    _settle_stamp: int = dataclasses.field(default=-1, repr=False)
+
+    @property
+    def start(self) -> int | None:
+        return self.span.start if self.span is not None else None
+
+    @property
+    def end(self) -> int | None:
+        return self.span.end if self.span is not None else None
 
     @property
     def macs(self) -> int:
@@ -126,7 +140,8 @@ class OnlineChip:
     lazily first, so observed shares/finish times are always converged.
     """
 
-    def __init__(self, chip: ChipConfig, snap_stride: int = SNAP_STRIDE):
+    def __init__(self, chip: ChipConfig, snap_stride: int = SNAP_STRIDE,
+                 prefix_cache: bool = True):
         if chip.arbitration != "epoch":
             raise ValueError("the online model is the epoch arbiter's "
                              "open-arrival form; use arbitration='epoch'")
@@ -138,14 +153,25 @@ class OnlineChip:
         self._E = chip.epoch_cycles
         self._budget = chip.bw_bytes_per_cycle
         self._ref = chip.backend == "reference"
+        #: the unified relaxation engine; ``prefix_cache=False`` keeps the
+        #: rebuild-from-epoch-0 baseline (and disables span pruning, which
+        #: depends on the settled prefix carrying retired contributions)
+        self._arb = SpanArbiter(self._budget, self._E, chip.share_policy,
+                                unthrottled_skip=not self._ref,
+                                prefix_cache=prefix_cache)
+        self._prune = prefix_cache
         self._queues: list[deque[Segment]] = [deque()
                                               for _ in range(chip.n_cores)]
-        self._segments: list[Segment] = []      # started, in start order
+        #: started, non-retired segments -- the arbiter's relaxation set
+        self._active: list[Segment] = []
+        #: aggregates over retired (pruned) segments
+        self._retired_makespan = 0.0
+        self._core_retired_epoch = [0] * chip.n_cores
+        self._core_retired_cycles = [0.0] * chip.n_cores
+        self.n_retired = 0
         self._next_sid = 0
         self._dirty = False
         self._dirty_from = math.inf     # earliest epoch whose share moved
-        self._share_trace: list[float] = []
-        self._active_trace: list[int] = []
         #: instrumentation: arbiter settles/rounds and how the fast path
         #: re-simulated (full replays vs. snapshot resumes vs. pure skips).
         self.stats = {"settles": 0, "rounds": 0, "sims_full": 0,
@@ -179,15 +205,32 @@ class OnlineChip:
             raise ValueError(f"core {core} out of range")
         seg = Segment(self._next_sid, core, specs, self.epoch)
         self._next_sid += 1
+        core_spec = self.chip.core_specs[core]
         if self._ref:
-            seg.stream = tuple(_lower_many(specs, self.chip.policy))
+            seg.stream = tuple(_lower_many(specs, core_spec.policy))
         else:
             seg.trace = compiled_trace(
                 tuple(dataclasses.replace(s, name="") for s in specs),
-                self.chip.policy)
+                core_spec.policy)
         seg.demands = demands_bandwidth(self.chip, seg.stream, seg.trace)
+        if seg.demands and self.chip.share_policy.needs_demand:
+            seg.weight = self.chip.share_policy.weight(self._demand_of(seg))
         self._queues[core].append(seg)
         return seg
+
+    def _demand_of(self, seg: Segment) -> float:
+        """Unthrottled bytes/cycle of a segment (the demand policy's
+        weight input) -- one extra unthrottled probe per admission."""
+        engine = self.chip.core_specs[seg.core].engine
+        params = stream_model_params(self.chip, engine)
+        if self._ref:
+            res = PipelineSimulator(engine,
+                                    load_model=params.make_model()) \
+                .run(seg.stream)
+        else:
+            res, _, _ = run_segment(seg.trace, engine, params)
+        traffic = shared_traffic_bytes(self.chip, seg.stream, seg.trace)
+        return traffic / res.cycles if res.cycles else 0.0
 
     def advance_to(self, epoch: int) -> None:
         """Move the clock to ``epoch``, starting queued segments at every
@@ -230,28 +273,32 @@ class OnlineChip:
     def n_active(self) -> int:
         """Segments drawing on the shared budget in the current epoch."""
         self._settle()
-        return sum(1 for s in self._segments
+        return sum(1 for s in self._active
                    if s.demands and s.start <= self.epoch
                    and (s.end is None or s.end > self.epoch))
 
     def live_share(self) -> float:
-        """Bytes/cycle each active segment is granted in the current epoch."""
+        """Bytes/cycle each active segment is granted in the current epoch
+        (under equal shares; the weighted mean share otherwise)."""
         return self._budget / max(1, self.n_active())
 
     def free_at_estimate(self) -> list[float]:
         """Per-core busy-until estimate (absolute cycles): the settled
         finish of started work plus unthrottled cost estimates of queued
-        segments -- the ``free_at`` vector incremental placement wants."""
+        segments -- the ``free_at`` vector incremental placement wants.
+        Queued estimates are costed on each core's own design (mixed
+        chips)."""
         from .scheduler import _estimate_cycles
         self._settle()
         now = self.epoch * self._E
         out = []
         for c in range(self.chip.n_cores):
-            t = max((self._finish(s) for s in self._segments if s.core == c),
-                    default=now)
-            t = max(t, now)
+            t = max((self._finish(s) for s in self._active if s.core == c),
+                    default=0.0)
+            t = max(t, self._core_retired_cycles[c], now)
             for seg in self._queues[c]:
-                t += sum(_estimate_cycles(s, self.chip) for s in seg.specs)
+                t += sum(_estimate_cycles(s, self.chip, c)
+                         for s in seg.specs)
             out.append(t)
         return out
 
@@ -259,7 +306,7 @@ class OnlineChip:
     def finish_time(self, seg: Segment) -> float:
         """Absolute retire time (cycles) of a started segment."""
         self._settle()
-        if seg.start is None or seg.result is None:
+        if seg.span is None or seg.result is None:
             raise RuntimeError(f"segment {seg.sid} has not started")
         return self._finish(seg)
 
@@ -267,29 +314,33 @@ class OnlineChip:
     def makespan(self) -> float:
         """Latest settled retire time over all started segments."""
         self._settle()
-        return max((self._finish(s) for s in self._segments), default=0.0)
+        live = max((self._finish(s) for s in self._active), default=0.0)
+        return max(live, self._retired_makespan)
 
     @property
     def share_trace(self) -> tuple[float, ...]:
+        """Converged bytes/cycle per unit weight, per epoch (equal shares:
+        the bytes/cycle each active segment receives)."""
         self._settle()
-        return tuple(self._share_trace)
+        return self._arb.share_trace
 
     @property
     def active_trace(self) -> tuple[int, ...]:
         self._settle()
-        return tuple(self._active_trace)
+        return self._arb.active_trace
 
     # --------------------------------------------------- internals
     def _finish(self, seg: Segment) -> float:
-        return seg.start * self._E + seg.result.cycles
+        return seg.span.start * self._E + seg.result.cycles
 
     def _core_free_epoch(self, c: int) -> int:
         """First epoch boundary at which core ``c``'s started work is done
         (requires settled state)."""
-        e = 0
-        for s in self._segments:
+        e = self._core_retired_epoch[c]
+        for s in self._active:
             if s.core == c:
-                e = max(e, s.start, math.ceil(self._finish(s) / self._E))
+                e = max(e, s.span.start,
+                        math.ceil(self._finish(s) / self._E))
         return e
 
     def _pump(self, upto: int) -> None:
@@ -320,9 +371,10 @@ class OnlineChip:
                 if b != b_min:
                     continue
                 seg = self._queues[c].popleft()
-                seg.start = b_min
-                seg.end = None if seg.demands else b_min
-                self._segments.append(seg)
+                seg.span = Span(start=b_min,
+                                end=None if seg.demands else b_min,
+                                demands=seg.demands, weight=seg.weight)
+                self._active.append(seg)
                 if seg.demands:
                     self._mark_dirty(b_min)
                 else:
@@ -331,90 +383,77 @@ class OnlineChip:
                     self._dirty = True
 
     def _retire(self) -> None:
-        """Free the re-simulation state of segments that are facts.
+        """Prune segments that are facts out of the relaxation set.
 
         Events only ever occur at epochs >= ``self.epoch`` (``_pump``
         processes intermediate boundaries before the clock moves), so a
         segment whose activity span closed at or before now can never be
-        marked dirty again: its result stands, and its snapshots, lowered
-        stream/trace reference and visible-schedule tuple are dead weight
-        over a long serving run.
+        marked dirty again: its result stands, its contribution to the
+        share schedule lives on in the arbiter's settled prefix, and its
+        snapshots, lowered stream/trace reference and span bookkeeping are
+        dead weight over a long serving run.  Per-core/chip maxima are
+        folded into scalar aggregates so queries stay O(in-flight).
+
+        With ``prefix_cache=False`` (the benchmark baseline) nothing is
+        pruned: the rebuild-from-0 arbiter re-derives every epoch from the
+        full span set, so every span must stay in it.
         """
-        for s in self._segments:
-            if s.end is not None and s.end <= self.epoch and s._vis is not \
-                    None:
-                s._snaps = []
-                s.stream = s.trace = None
-                s._vis = None
+        if not self._prune:
+            return
+        keep: list[Segment] = []
+        for s in self._active:
+            if s.end is None or s.end > self.epoch:
+                keep.append(s)
+                continue
+            f = self._finish(s)
+            c = s.core
+            self._retired_makespan = max(self._retired_makespan, f)
+            self._core_retired_cycles[c] = max(self._core_retired_cycles[c],
+                                               f)
+            self._core_retired_epoch[c] = max(
+                self._core_retired_epoch[c], s.span.start,
+                math.ceil(f / self._E))
+            self.n_retired += 1
+            s._snaps = []
+            s.stream = s.trace = None
+        self._active = keep
 
     def _mark_dirty(self, from_epoch: int) -> None:
         """An event at ``from_epoch`` invalidates every segment still
         active there: back to 'active indefinitely' for the relaxation."""
         self._dirty = True
         self._dirty_from = min(self._dirty_from, from_epoch)
-        for s in self._segments:
+        for s in self._active:
             if s.demands and (s.end is None or s.end > from_epoch):
-                s.end = None
+                s.span.end = None
 
     def _settle(self) -> None:
-        """Relax the staggered-span share schedule to its fixed point.
+        """Relax the share schedule to its fixed point (the thin client).
 
-        Dirty segments start from 'active indefinitely' (pointwise-minimal
-        shares); each round re-simulates every segment whose visible
-        schedule changed and shrinks its activity span to its last granted
-        access -- shrinking spans only raise later shares, so the
-        iteration is monotone and converges exactly as in the closed-batch
-        arbiter.
+        All relaxation logic -- schedule building, skip rules, monotone
+        convergence, the settled-prefix cache -- lives in
+        :class:`SpanArbiter`; this method only maps spans back to segments
+        and runs their (resumable) re-simulations.
         """
         if not self._dirty:
             return
         self.stats["settles"] += 1
-        stamp = self.stats["settles"]
-        dirty_from = self._dirty_from
-        segs = [s for s in self._segments if s.demands]
-        for s in self._segments:
-            if not s.demands and s.result is None:
-                # schedule-independent: no shared-memory traffic at all
-                self._simulate(s, ((), math.inf))
-                s.last_grant = 0.0
-        shares: list[float] = []
-        n_active: list[int] = []
-        for _ in range(MAX_ARBITER_ROUNDS):
-            self.stats["rounds"] += 1
-            shares, n_active = build_share_schedule(
-                [(s.start, s.end) for s in segs], self._budget)
-            n_forever = sum(1 for s in segs if s.end is None)
-            for s in segs:
-                if s.end is not None and s.end <= dirty_from:
-                    # settled fact: this settle's dirt only moves shares
-                    # in epochs >= dirty_from, all past this span's end
-                    continue
-                if s.end is None:
-                    vis = (tuple(shares[s.start:]),
-                           self._budget / n_forever)
-                else:
-                    vis = (tuple(shares[s.start:s.end]), self._budget)
-                # a segment the arbiter never delayed runs identically
-                # under any pointwise-larger schedule, and within one
-                # settle rounds only raise shares -- its result is final
-                # (cf. the closed-batch arbiter's skip; not valid across
-                # settles: an arrival lowers shares).  Reference stays
-                # the skip-free oracle.
-                unthrottled = (not self._ref and s._settle_stamp == stamp
-                               and s.result.load_stall_cycles == 0.0)
-                if s._vis != vis and not unthrottled:
-                    self._simulate(s, vis)
-                    s._settle_stamp = stamp
-            converged = True
-            for s in segs:
-                e = s.start + int(s.last_grant // self._E) + 1
-                e = e if s.end is None else min(s.end, e)
-                if e != s.end:
-                    s.end = e
-                    converged = False
-            if converged:
-                break
-        self._share_trace, self._active_trace = shares, n_active
+        segs = self._active
+        spans = [s.span for s in segs]
+        if math.isinf(self._dirty_from):
+            # no share moved (non-demanding starts only): keep the whole
+            # settled schedule, just simulate the new segments
+            dirty_from = self._arb.settled_horizon
+        else:
+            dirty_from = int(self._dirty_from)
+
+        def simulate(jobs):
+            for i, prefix, tail in jobs:
+                self._simulate(segs[i], (prefix, tail))
+
+        trace = self._arb.relax(spans, simulate, dirty_from=dirty_from,
+                                collect_trace=False)
+        self.stats["rounds"] += trace.rounds
         self._dirty = False
         self._dirty_from = math.inf
 
@@ -424,20 +463,25 @@ class OnlineChip:
         The reference oracle replays the full stream; the fast path
         resumes from the latest snapshot whose horizon precedes the first
         changed epoch (snapshots before it stay valid, ones after it are
-        discarded and re-recorded).
+        discarded and re-recorded).  ``seg.span._vis`` still holds the
+        *previous* visible schedule here -- the arbiter updates it only
+        after the simulation batch returns.
         """
         prefix, tail = vis
-        params = stream_model_params(self.chip, prefix, self._E, tail)
+        engine = self.chip.core_specs[seg.core].engine
+        params = stream_model_params(self.chip, engine, prefix, self._E,
+                                     tail)
         if self._ref:
             model = params.make_model()
-            res = PipelineSimulator(self.chip.engine,
+            res = PipelineSimulator(engine,
                                     load_model=model).run(seg.stream)
-            seg.result, seg.last_grant = res, model.last_grant
+            last_grant = model.last_grant
             self.stats["sims_full"] += 1
         else:
             carry = None
-            if seg._vis is not None and seg._snaps:
-                x = _first_change(seg._vis, vis)
+            old_vis = seg.span._vis
+            if old_vis is not None and seg._snaps:
+                x = _first_change(old_vis, vis)
                 if x is not None:
                     boundary = x * self._E
                     for c in seg._snaps:
@@ -445,9 +489,9 @@ class OnlineChip:
                             carry = c
                         else:
                             break
-            res, lg, snaps = run_segment(seg.trace, self.chip.engine,
-                                         params, carry=carry,
-                                         snap_stride=self.snap_stride)
+            res, last_grant, snaps = run_segment(
+                seg.trace, engine, params, carry=carry,
+                snap_stride=self.snap_stride)
             if carry is None:
                 seg._snaps = snaps
                 self.stats["sims_full"] += 1
@@ -456,5 +500,6 @@ class OnlineChip:
                               if c.i <= carry.i] + snaps
                 self.stats["sims_resumed"] += 1
                 self.stats["instrs_resumed_past"] += carry.i
-            seg.result, seg.last_grant = res, lg
-        seg._vis = vis
+        seg.result = res
+        seg.span.last_grant = last_grant
+        seg.span.throttled = res.load_stall_cycles != 0.0

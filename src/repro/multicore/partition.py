@@ -18,6 +18,12 @@ Strategies (``PARTITIONERS``):
               and tile-cols j, j+pn, ...  The cyclically gathered tiles are
               modelled as one dense sub-GEMM per core (tile counts -- the
               quantity the cycle model sees -- are identical).
+
+Partitioners are core-design agnostic: shards are plain ``GemmSpec``s, so
+they flow unchanged onto heterogeneous chips (each core lowers its shard
+under its own :class:`~repro.multicore.chip.CoreSpec`); balancing a split
+*across* a BASE/RASA mix is the scheduler's job (``gang`` costs every
+shard on its target core).
 """
 
 from __future__ import annotations

@@ -7,10 +7,11 @@ One model layer = one GEMM; a workload is the list of layer GEMMs (e.g.
   round_robin -- static: GEMM ``i`` goes to core ``i % n_cores``, blind to
                  cost.  The baseline every dynamic policy must beat.
   work_queue  -- dynamic: GEMMs are pulled from a single queue by whichever
-                 core frees up first (deterministic work-stealing under the
-                 cost model).  Costs are estimated with the unthrottled
-                 single-engine simulator (cached), then the final placement
-                 is re-simulated under the shared-bandwidth model.
+                 core *completes them* first (deterministic work-stealing
+                 under the cost model).  Costs are estimated with the
+                 unthrottled single-engine simulator (cached), then the
+                 final placement is re-simulated under the shared-bandwidth
+                 model.
   lpt         -- work_queue with GEMMs sorted longest-first (classic LPT
                  bound); better balance when the workload is skewed but
                  ignores submission order.
@@ -26,6 +27,15 @@ One model layer = one GEMM; a workload is the list of layer GEMMs (e.g.
                  combined partition x schedule policy: a dominant GEMM
                  that would leave cores idle under whole-GEMM LPT gets
                  gang-split across them.
+
+All cost estimates are **per (GEMM, core)**: on a heterogeneous chip
+(mixed :class:`~repro.multicore.chip.CoreSpec` vector) each candidate
+placement is costed on the target core's own design, so the dynamic
+schedulers route reuse-friendly (WLBP-favoring) GEMMs to the RASA cores
+that finish them first and leave BASE cores the work they are least bad
+at.  On a homogeneous chip every estimate is core-independent and the
+placements reduce exactly to the classic free-at rules (the tests pin
+this).
 
 The first three place each GEMM whole on a single core (layer-level
 parallelism); only ``gang`` combines inter- and intra-GEMM parallelism.
@@ -45,16 +55,28 @@ from .partition import split_ways
 SCHEDULERS = ("round_robin", "work_queue", "lpt", "gang")
 
 
-def _estimate_cycles(spec: GemmSpec, chip: ChipConfig) -> float:
+def _estimate_cycles(spec: GemmSpec, chip: ChipConfig, core: int = 0) -> float:
     # cost depends only on the dims, but the lru_cache key includes the
     # name -- canonicalize it so equal-dim shards ("x@c0", "x@c1", ...)
     # and repeated layers hit one cache entry instead of re-simulating.
     # Estimates run on the chip's backend: results are backend-independent
     # (see docs/performance.md), so gang's many split_ways probes get the
-    # fast path too.
+    # fast path too.  The estimate is per *core*: a mixed chip costs each
+    # candidate placement on the target core's own design/policy.
     spec = dataclasses.replace(spec, name="")
-    return _simulate_cached(spec, chip.engine.name, chip.policy,
+    core_spec = chip.core_specs[core]
+    return _simulate_cached(spec, core_spec.design, core_spec.policy,
                             chip.backend).cycles
+
+
+def _workload_cycles(spec: GemmSpec, chip: ChipConfig) -> float:
+    """Core-independent size of a GEMM: its best-core estimate.
+
+    The LPT/gang orderings need one scalar per GEMM; on a homogeneous chip
+    this equals the (only) per-core estimate, on a mixed chip it is the
+    cost on the core that runs the GEMM fastest.
+    """
+    return min(_estimate_cycles(spec, chip, c) for c in range(chip.n_cores))
 
 
 def assign_round_robin(specs: list[GemmSpec], n_cores: int) -> list[list[GemmSpec]]:
@@ -68,13 +90,16 @@ def assign_work_queue(specs: list[GemmSpec], n_cores: int, chip: ChipConfig,
                       longest_first: bool = False) -> list[list[GemmSpec]]:
     order = specs
     if longest_first:
-        order = sorted(specs, key=lambda s: -_estimate_cycles(s, chip))
+        order = sorted(specs, key=lambda s: -_workload_cycles(s, chip))
     out: list[list[GemmSpec]] = [[] for _ in range(n_cores)]
     free_at = [0.0] * n_cores
     for spec in order:
-        core = min(range(n_cores), key=lambda c: free_at[c])
+        # earliest *completion*, not earliest free slot: on a mixed chip a
+        # busier RASA core can still finish a reuse-friendly GEMM first
+        core = min(range(n_cores),
+                   key=lambda c: free_at[c] + _estimate_cycles(spec, chip, c))
         out[core].append(spec)
-        free_at[core] += _estimate_cycles(spec, chip)
+        free_at[core] += _estimate_cycles(spec, chip, core)
     return out
 
 
@@ -90,7 +115,8 @@ def assign_gang(specs: list[GemmSpec], chip: ChipConfig,
     * the plain whole-GEMM LPT schedule;
     * a greedy gang schedule: GEMMs longest-first, each placed at the gang
       width ``w`` in 1..n_cores whose sharded placement (longest shards on
-      the soonest-free cores) completes earliest.
+      the soonest-free cores, each shard costed on its target core)
+      completes earliest.
 
     On a balanced workload the greedy splitter serializes gangs and loses,
     so gang placement degenerates to LPT exactly; on a skewed one the
@@ -101,12 +127,13 @@ def assign_gang(specs: list[GemmSpec], chip: ChipConfig,
     n_cores = chip.n_cores
     if n_cores == 1:
         return [list(specs)]
-    est = lambda s: _estimate_cycles(s, chip)
+    est = lambda s, c: _estimate_cycles(s, chip, c)
 
     whole = assign_work_queue(specs, n_cores, chip, longest_first=True)
-    whole_makespan = max(sum(est(s) for s in core) for core in whole)
+    whole_makespan = max(sum(est(s, c) for s in core)
+                         for c, core in enumerate(whole))
 
-    order = sorted(specs, key=lambda s: -est(s))
+    order = sorted(specs, key=lambda s: -_workload_cycles(s, chip))
     gang: list[list[GemmSpec]] = [[] for _ in range(n_cores)]
     free_at = [0.0] * n_cores
     for spec in order:
@@ -117,15 +144,15 @@ def assign_gang(specs: list[GemmSpec], chip: ChipConfig,
             if len(shards) < w:
                 continue            # more gang slots than tiles at this width
             cores = sorted(range(n_cores), key=lambda c: free_at[c])[:w]
-            shards = sorted(shards, key=lambda s: -est(s))
+            shards = sorted(shards, key=lambda s: -_workload_cycles(s, chip))
             placement = list(zip(cores, shards))
-            completion = max(free_at[c] + est(s) for c, s in placement)
+            completion = max(free_at[c] + est(s, c) for c, s in placement)
             if best is None or (completion, w) < best:
                 best = (completion, w)
                 best_placement = placement
         for core, shard in best_placement:
             gang[core].append(shard)
-            free_at[core] += est(shard)
+            free_at[core] += est(shard, core)
     return gang if max(free_at) < whole_makespan else whole
 
 
@@ -136,14 +163,15 @@ def assign_incremental(items: Sequence, chip: ChipConfig,
     The online form of ``work_queue``: ``free_at[c]`` is core *c*'s current
     busy-until estimate (e.g. :meth:`repro.multicore.online.OnlineChip.
     free_at_estimate`); each item goes, in submission order, to the core
-    that frees up soonest, and the estimate is advanced by the item's
-    unthrottled cost.  An item is either one :class:`GemmSpec` or a
-    sequence of them that must land on a single core as a unit (a serving
-    request's prefill + decode chain); items are returned as given, so the
-    caller can map them back.  Only the per-core *additions* are returned
-    -- the caller owns the existing placement.  With ``n_cores == 1`` (and
-    any ``free_at``) this is all items, in submission order, on core 0 --
-    the single-core reduction the tests pin down.
+    that *completes* it soonest (its backlog plus the item's unthrottled
+    cost on that core's design), and the estimate is advanced accordingly.
+    An item is either one :class:`GemmSpec` or a sequence of them that must
+    land on a single core as a unit (a serving request's prefill + decode
+    chain); items are returned as given, so the caller can map them back.
+    Only the per-core *additions* are returned -- the caller owns the
+    existing placement.  With ``n_cores == 1`` (and any ``free_at``) this
+    is all items, in submission order, on core 0 -- the single-core
+    reduction the tests pin down.
     """
     if len(free_at) != chip.n_cores:
         raise ValueError(f"need one free_at entry per core, got "
@@ -152,9 +180,10 @@ def assign_incremental(items: Sequence, chip: ChipConfig,
     free = list(free_at)
     for item in items:
         specs = (item,) if isinstance(item, GemmSpec) else tuple(item)
-        core = min(range(chip.n_cores), key=lambda c: free[c])
+        cost = lambda c: sum(_estimate_cycles(s, chip, c) for s in specs)
+        core = min(range(chip.n_cores), key=lambda c: free[c] + cost(c))
         out[core].append(item)
-        free[core] += sum(_estimate_cycles(s, chip) for s in specs)
+        free[core] += cost(core)
     return out
 
 
@@ -185,7 +214,9 @@ def scheduled_chip_report(specs: list[GemmSpec], chip: ChipConfig,
         raise ValueError("empty workload")
     shards = assign(specs, chip, scheduler, partition)
     streams, traces = _streams_traces(chip, shards)
-    results, stalls, trace = CoreCluster(chip).run_streams(streams, traces)
+    cluster = CoreCluster(chip)
+    results, stalls, trace = cluster.run_streams(streams, traces)
     name = f"{specs[0].name}+{len(specs) - 1}" if len(specs) > 1 else specs[0].name
     return _aggregate(chip, name, scheduler, shards, results, stalls,
-                      _single_core_cycles(chip, specs), trace)
+                      _single_core_cycles(chip, specs), trace,
+                      cluster.core_weights)

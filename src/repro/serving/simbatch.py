@@ -31,6 +31,15 @@ epoch bandwidth arbiter.  Policies (:data:`POLICIES`):
     queues behind a busy engine), subject to the same bandwidth headroom
     check as ``bandwidth``.  This is the policy that sees both live chip
     signals.
+``predicted``
+    Predicted-occupancy: like ``occupancy``, but instead of reacting to
+    cores that are idle *now* it forecasts departures from the online
+    chip's settled share-schedule prefix -- a core whose settled work (and
+    queued backlog estimate) drains within ``lookahead`` epochs counts as
+    available, and the admitted request is queued so it starts at the
+    exact boundary the core frees up, instead of waiting for the next
+    decision epoch.  Never admits more than one request per predicted-free
+    core, and subject to the same bandwidth headroom check.
 
 Work conservation: whenever the chip is completely idle and a
 threshold policy (``bandwidth``/``occupancy``) declines every waiting
@@ -61,7 +70,7 @@ from ..multicore.chip import ChipConfig
 from ..multicore.online import OnlineChip
 from ..multicore.scheduler import assign_incremental
 
-POLICIES = ("fixed", "bandwidth", "occupancy")
+POLICIES = ("fixed", "bandwidth", "occupancy", "predicted")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -190,19 +199,24 @@ class _Batcher:
 
     def __init__(self, requests: Sequence[ServeRequest], chip: ChipConfig,
                  policy: str, batch_size: int, min_share: float,
-                 snap_stride: int):
+                 snap_stride: int, lookahead: int = 1,
+                 prefix_cache: bool = True):
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; "
                              f"available: {POLICIES}")
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
+        if lookahead < 0:
+            raise ValueError("lookahead must be >= 0")
         self.chip = chip
         self.policy = policy
         self.batch_size = batch_size
         self.min_share = min_share
+        self.lookahead = lookahead
         self.submitted = list(requests)     # caller order, for the report
         self.requests = sorted(requests, key=lambda r: r.arrival_epoch)
-        self.sim = OnlineChip(chip, snap_stride=snap_stride)
+        self.sim = OnlineChip(chip, snap_stride=snap_stride,
+                              prefix_cache=prefix_cache)
         self.waiting: deque[ServeRequest] = deque()
         self.next_arrival = 0               # index into self.requests
         self.segments: dict[str, object] = {}
@@ -243,6 +257,19 @@ class _Batcher:
                           if not busy]
             take = min(take, len(free_cores))
             return [(waiting.popleft(), free_cores[i]) for i in range(take)]
+        if self.policy == "predicted":
+            # forecast from the settled schedule: a core whose settled
+            # work + queued backlog drains within the lookahead window is
+            # available -- its admitted request starts at the exact
+            # boundary it frees up, one decision epoch earlier than the
+            # reactive occupancy policy can manage
+            horizon = (sim.epoch + self.lookahead) * self.chip.epoch_cycles
+            free_at = sim.free_at_estimate()
+            soon = sorted((c for c in range(n_cores)
+                           if free_at[c] <= horizon),
+                          key=lambda c: free_at[c])
+            take = min(take, len(soon))
+            return [(waiting.popleft(), soon[i]) for i in range(take)]
         # bandwidth: headroom-gated, placed on the soonest-free core
         reqs = [waiting.popleft() for _ in range(take)]
         return self._soonest_free(reqs)
@@ -308,7 +335,7 @@ class _Batcher:
         first = min((r.arrival_epoch for r in reqs), default=0) * E
         return BatchReport(
             policy=self.policy,
-            design=self.chip.design,
+            design=self.chip.design_name,
             n_cores=self.chip.n_cores,
             n_requests=len(reqs),
             epoch_cycles=E,
@@ -327,14 +354,21 @@ def run_batcher(requests: Sequence[ServeRequest],
                 policy: str = "occupancy", batch_size: int = 4,
                 min_share: float | None = None,
                 snap_stride: int = SNAP_STRIDE,
+                lookahead: int = 1,
+                prefix_cache: bool = True,
                 **chip_kwargs) -> BatchReport:
     """Serve an arrival trace through the online chip model.
 
     ``min_share`` (bytes/cycle) is the bandwidth-headroom floor of the
-    ``bandwidth``/``occupancy`` policies; the default admits up to two
-    concurrent requests per core before throttling admission.  Extra
-    keyword arguments construct the :class:`ChipConfig` when none is
-    given (cf. :func:`repro.multicore.simulate_chip`).
+    threshold policies (``bandwidth``/``occupancy``/``predicted``); the
+    default admits up to two concurrent requests per core before
+    throttling admission.  ``lookahead`` (epochs) is the ``predicted``
+    policy's departure-forecast window.  ``prefix_cache=False`` runs the
+    online arbiter in its rebuild-from-epoch-0 baseline mode (identical
+    results, linearly more work -- the ``benchmarks/online_scaling.py``
+    comparison).  Extra keyword arguments construct the
+    :class:`ChipConfig` when none is given (cf.
+    :func:`repro.multicore.simulate_chip`).
     """
     if chip is None:
         chip = ChipConfig(**chip_kwargs)
@@ -347,4 +381,4 @@ def run_batcher(requests: Sequence[ServeRequest],
     if len(set(names)) != len(names):
         raise ValueError("request names must be unique")
     return _Batcher(requests, chip, policy, batch_size, min_share,
-                    snap_stride).run()
+                    snap_stride, lookahead, prefix_cache).run()

@@ -75,6 +75,59 @@ def test_occupancy_beats_fixed_on_skewed_trace():
     assert occ.macs == fixed.macs      # same offered load either way
 
 
+def test_predicted_no_worse_than_occupancy_on_skewed_trace():
+    """The predicted-occupancy policy forecasts departures from the
+    settled share-schedule prefix instead of reacting to current
+    occupancy: on the skewed 4-core trace it must be no worse than
+    ``occupancy`` (and, like it, strictly beat the fixed baseline)."""
+    requests, kwargs = SCENARIOS["skewed4"]
+    occ = run_batcher(requests, ChipConfig(**kwargs), policy="occupancy")
+    pred = run_batcher(requests, ChipConfig(**kwargs), policy="predicted")
+    fixed = run_batcher(requests, ChipConfig(**kwargs), policy="fixed")
+    assert pred.makespan <= occ.makespan
+    assert pred.makespan < fixed.makespan
+    assert pred.macs == occ.macs
+    # full-scale skew as well (the benchmark's acceptance scenario)
+    full = skewed_trace()
+    occ_f = run_batcher(full, ChipConfig(**kwargs), policy="occupancy")
+    pred_f = run_batcher(full, ChipConfig(**kwargs), policy="predicted")
+    assert pred_f.makespan <= occ_f.makespan
+
+
+def test_predicted_backend_parity():
+    """The predicted policy's admission decisions and timings agree across
+    the reference, fast and numpy backends."""
+    requests, kwargs = SCENARIOS["steady"]
+    reps = {be: run_batcher(requests, ChipConfig(backend=be, **kwargs),
+                            policy="predicted", snap_stride=512)
+            for be in ("reference", "fast", "numpy")}
+    ref = reps["reference"]
+    for be in ("fast", "numpy"):
+        assert reps[be].makespan == pytest.approx(ref.makespan, rel=REL)
+        assert reps[be].finish_times == pytest.approx(ref.finish_times,
+                                                      rel=REL)
+        assert reps[be].admit_epochs == ref.admit_epochs
+
+
+def test_predicted_queues_on_soon_free_core():
+    """With a positive lookahead the predicted policy may queue behind a
+    core that drains within the window -- admissions can land strictly
+    earlier than occupancy's, never later; lookahead=0 degenerates to
+    reacting to settled-idle cores only."""
+    requests = synthetic_trace(6, seed=7, mean_gap=1, d_model=256,
+                               prompt_lens=(64,), decode_steps=(2,))
+    chip = ChipConfig(n_cores=2, design="RASA-WLBP",
+                      bw_bytes_per_cycle=48.0)
+    occ = run_batcher(requests, chip, policy="occupancy")
+    pred = run_batcher(requests, chip, policy="predicted", lookahead=4)
+    assert all(p <= o for p, o in zip(pred.admit_epochs,
+                                      occ.admit_epochs))
+    zero = run_batcher(requests, chip, policy="predicted", lookahead=0)
+    assert zero.n_requests == len(requests)
+    with pytest.raises(ValueError):
+        run_batcher(requests, chip, policy="predicted", lookahead=-1)
+
+
 def test_bandwidth_threshold_paces_admission():
     """A high share floor forces serial admission; dropping it to zero
     admits everything at arrival."""
