@@ -1,18 +1,97 @@
-"""Shared benchmark plumbing: CSV emission + fingerprinted result caching."""
+"""Shared benchmark plumbing: CSV emission, fingerprinted result caching,
+and the common ``BENCH_*.json`` envelope every benchmark emits through."""
 
 from __future__ import annotations
 
+import datetime
 import hashlib
 import inspect
 import json
+import platform
+import subprocess
 import time
 from pathlib import Path
 
 RESULTS = Path(__file__).resolve().parent / "results"
 
+#: envelope schema version of every BENCH_*.json; bump on breaking changes
+BENCH_SCHEMA = "rasa-bench/1"
+
+#: envelope keys every BENCH file must carry (checked by validate_bench)
+BENCH_KEYS = ("schema", "benchmark", "git_rev", "timestamp_utc", "backend",
+              "host", "python", "data")
+
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def _git_rev() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=Path(__file__).resolve().parent, capture_output=True,
+            text=True, timeout=10)
+        rev = out.stdout.strip()
+        return rev if out.returncode == 0 and rev else "unknown"
+    except OSError:
+        return "unknown"
+
+
+def bench_envelope(benchmark: str, backend: str | None = None) -> dict:
+    """The shared metadata block of a ``BENCH_<benchmark>.json`` file.
+
+    Makes the perf trajectory machine-comparable across PRs: which commit,
+    when, on which host/interpreter, and on which simulation backend the
+    numbers were produced.
+    """
+    return {
+        "schema": BENCH_SCHEMA,
+        "benchmark": benchmark,
+        "git_rev": _git_rev(),
+        "timestamp_utc": datetime.datetime.now(datetime.timezone.utc)
+        .isoformat(timespec="seconds"),
+        "backend": backend,
+        "host": platform.node() or "unknown",
+        "python": platform.python_version(),
+    }
+
+
+def write_bench(benchmark: str, data, backend: str | None = None) -> Path:
+    """Write ``BENCH_<benchmark>.json``: the shared envelope + ``data``."""
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    path = RESULTS / f"BENCH_{benchmark}.json"
+    payload = bench_envelope(benchmark, backend)
+    payload["data"] = data
+    path.write_text(json.dumps(payload, indent=2))
+    return path
+
+
+def validate_bench(path: Path) -> list[str]:
+    """Schema-check one BENCH file; returns a list of problems (empty = ok).
+
+    Checked: parseable JSON object, every envelope key present, schema
+    version match, and the embedded benchmark name agreeing with the
+    ``BENCH_<name>.json`` filename.
+    """
+    path = Path(path)
+    try:
+        doc = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path.name}: unreadable ({e})"]
+    if not isinstance(doc, dict):
+        return [f"{path.name}: top level must be an object, "
+                f"got {type(doc).__name__}"]
+    errors = [f"{path.name}: missing envelope key {k!r}"
+              for k in BENCH_KEYS if k not in doc]
+    if doc.get("schema") not in (None, BENCH_SCHEMA):
+        errors.append(f"{path.name}: schema {doc['schema']!r} != "
+                      f"{BENCH_SCHEMA!r}")
+    expect = path.stem.removeprefix("BENCH_")
+    if "benchmark" in doc and doc["benchmark"] != expect:
+        errors.append(f"{path.name}: benchmark {doc['benchmark']!r} does "
+                      f"not match filename ({expect!r})")
+    return errors
 
 
 def model_fingerprint(*sources) -> str:

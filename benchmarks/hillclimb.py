@@ -258,9 +258,15 @@ def design_search(workload: str = "bert", steps: int = 20,
     from repro.core import sweep_workload
     from repro.core.simulator import _simulate_cached
     from repro.core.tiling import ALG1_POLICY
+    from repro.obs.attribution import simreport_attribution
 
     specs = [TABLE_I[k] for k in SEARCH_WORKLOADS[workload]]
     counter = [0]
+
+    def attribution(policy, cycles) -> dict:
+        """Unthrottled {compute, fill_drain, ...} split of one candidate --
+        the 'why does this design win' column of the search log."""
+        return simreport_attribution(specs, policy, cycles).fractions()
 
     def to_cfg(kw) -> EngineConfig:
         counter[0] += 1
@@ -292,7 +298,8 @@ def design_search(workload: str = "bert", steps: int = 20,
              ALG1_POLICY)
     cur, (cur_cost,) = start, evaluate([start])
     path = [{"step": 0, "engine": dict(cur[0]),
-             "policy": dataclasses.asdict(cur[1]), "cycles": cur_cost}]
+             "policy": dataclasses.asdict(cur[1]), "cycles": cur_cost,
+             "attribution": attribution(cur[1], cur_cost)}]
     t0 = time.time()
     probes = 1
     for step in range(1, steps + 1):
@@ -305,7 +312,8 @@ def design_search(workload: str = "bert", steps: int = 20,
         cur, cur_cost = neigh[best_i], costs[best_i]
         path.append({"step": step, "engine": dict(cur[0]),
                      "policy": dataclasses.asdict(cur[1]),
-                     "cycles": cur_cost})
+                     "cycles": cur_cost,
+                     "attribution": attribution(cur[1], cur_cost)})
     elapsed = time.time() - t0
 
     # named baselines (exercises the EngineConfig-keyed _simulate_cached)
@@ -350,11 +358,14 @@ def main():
               f"{r['elapsed_s']:.1f}s ({len(r['path']) - 1} accepted moves)")
         for p in r["path"]:
             e = p["engine"]
+            a = p["attribution"]
             print(f"  step {p['step']:>2}  {p['cycles']:>12.0f} cyc  "
                   f"{e['rows']}x{e['cols']}x{e['macs_per_pe']} "
                   f"pipe={e['pipe']} wlbp={e['wlbp']} wls={e['wls']} "
                   f"lat={e['load_latency']} ports={e['load_ports']} "
-                  f"policy={p['policy']['mc']}x{p['policy']['nc']}")
+                  f"policy={p['policy']['mc']}x{p['policy']['nc']}  "
+                  f"compute={a['compute']:.0%} "
+                  f"fill/drain={a['fill_drain']:.0%}")
         print(f"best {r['best_cycles']:.0f} cyc vs best named "
               f"{base[0]} {base[1]:.0f} cyc "
               f"({r['speedup_vs_best_named']:.2f}x)")

@@ -46,7 +46,8 @@ import repro.multicore.scheduler
 from repro.core import TABLE_I, GemmSpec
 from repro.multicore import CHIP_BACKENDS, ChipConfig, simulate_chip
 
-from common import cache_json, emit, model_fingerprint  # type: ignore
+from common import (RESULTS, cache_json, emit, model_fingerprint,  # type: ignore
+                    write_bench)
 
 SPEC = GemmSpec("BERT-1", 256, 768, 768)    # Table I BERT-1 dims
 CORES = (1, 2, 4, 8, 16)
@@ -132,7 +133,25 @@ def run(force: bool = False, backend: str = "fast") -> dict:
     # never be served from the fast backend's cache (and vice versa)
     key = "multicore_scaling" if backend == "fast" \
         else f"multicore_scaling_{backend}"
-    return cache_json(key, compute, force=force, fingerprint=_fingerprint())
+    table = cache_json(key, compute, force=force, fingerprint=_fingerprint())
+    if backend == "fast":
+        write_bench("multicore_scaling", table, backend=backend)
+        _write_trace_artifact()
+    return table
+
+
+def _write_trace_artifact() -> None:
+    """Perfetto artifact of the epoch-arbitration scenario (CI uploads it)."""
+    from repro.obs import TelemetryConfig, write_trace
+    rep = simulate_chip(
+        SCHED_WORKLOAD,
+        ChipConfig(n_cores=4, design="RASA-WLBP",
+                   bw_bytes_per_cycle=ARB_BW, arbitration="epoch",
+                   backend="fast"),
+        scheduler="lpt",
+        telemetry=TelemetryConfig(enabled=True, stages=True))
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    write_trace(rep.telemetry, RESULTS / "multicore_epoch.trace.json")
 
 
 def main(argv=None) -> None:

@@ -29,7 +29,6 @@ the unified arbiter's prefix cache removes.
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 import time
 from pathlib import Path
@@ -40,7 +39,7 @@ from repro.core.fastsim import SNAP_STRIDE
 from repro.multicore import ChipConfig
 from repro.serving.simbatch import _Batcher, synthetic_trace
 
-from common import RESULTS, emit  # type: ignore
+from common import emit, write_bench  # type: ignore
 
 N_FULL = 1000
 N_SMOKE = 100
@@ -97,9 +96,7 @@ def run(n_requests: int, smoke: bool = False) -> dict:
         "p50_latency": rep_on.p50_latency,
         "p99_latency": rep_on.p99_latency,
     }
-    RESULTS.mkdir(parents=True, exist_ok=True)
-    (RESULTS / "BENCH_online_scaling.json").write_text(
-        json.dumps(table, indent=2))
+    write_bench("online_scaling", table, backend="fast")
     return table
 
 

@@ -14,10 +14,18 @@ from __future__ import annotations
 import sys
 sys.path.insert(0, "src")
 
+import repro.core.designs
+import repro.core.isa
+import repro.core.simulator
+import repro.core.tiling
+import repro.core.timing
+import repro.core.trace
 from repro.configs import ARCH_NAMES, get_config
 from repro.core import GemmSpec, simulate
+from repro.core.tiling import ALG1_POLICY
+from repro.obs.attribution import simreport_attribution
 
-from common import cache_json, emit  # type: ignore
+from common import cache_json, emit, model_fingerprint  # type: ignore
 
 
 def layer_gemms(arch: str, batch: int) -> list[GemmSpec]:
@@ -55,22 +63,33 @@ def run(force: bool = False) -> dict:
         table = {}
         for arch in ARCH_NAMES:
             for batch in (1, 16):
+                specs = layer_gemms(arch, batch)
                 base = rasa = 0.0
-                for spec in layer_gemms(arch, batch):
+                for spec in specs:
                     base += simulate(spec, "BASE").cycles
                     rasa += simulate(spec, "RASA-DMDB-WLS").cycles
                 table[f"{arch}_b{batch}"] = {
                     "base_cycles": base, "rasa_cycles": rasa,
-                    "speedup": base / max(rasa, 1e-9)}
+                    "speedup": base / max(rasa, 1e-9),
+                    # where the remaining RASA cycles go: the compute vs.
+                    # fill/drain split explains *why* a shape speeds up
+                    "attribution": simreport_attribution(
+                        specs, ALG1_POLICY, rasa).fractions()}
         return table
-    return cache_json("rasa_llm_projection", compute, force=force)
+    fingerprint = model_fingerprint(
+        repro.core.designs, repro.core.isa, repro.core.simulator,
+        repro.core.tiling, repro.core.timing, repro.core.trace, __file__)
+    return cache_json("rasa_llm_projection", compute, force=force,
+                      fingerprint=fingerprint)
 
 
 def main() -> None:
     table = run()
     for key, v in table.items():
+        a = v["attribution"]
         emit(f"rasa_llm_{key}", 0.0,
-             f"speedup={v['speedup']:.2f};base={v['base_cycles']:.0f}")
+             f"speedup={v['speedup']:.2f};base={v['base_cycles']:.0f};"
+             f"compute={a['compute']:.2f};fill_drain={a['fill_drain']:.2f}")
 
 
 if __name__ == "__main__":

@@ -2,10 +2,18 @@
 
 ``PYTHONPATH=src python -m benchmarks.run``
 prints ``name,us_per_call,derived`` CSV lines per benchmark.
+
+``python benchmarks/run.py --check-telemetry`` instead validates every
+emitted ``BENCH_*.json`` against the shared envelope schema
+(``common.BENCH_SCHEMA``) and every ``*.trace.json`` artifact for
+Chrome-trace shape, exiting non-zero on any violation -- the CI gate that
+keeps the perf trajectory machine-comparable across PRs.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 from pathlib import Path
 
@@ -13,7 +21,43 @@ sys.path.insert(0, str(Path(__file__).resolve().parent))
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 
-def main() -> None:
+def check_telemetry() -> int:
+    """Validate all BENCH envelopes + trace artifacts; 0 = all valid."""
+    from common import RESULTS, validate_bench
+    problems: list[str] = []
+    benches = sorted(RESULTS.glob("BENCH_*.json"))
+    for path in benches:
+        problems += validate_bench(path)
+    traces = sorted(RESULTS.glob("*.trace.json"))
+    for path in traces:
+        try:
+            doc = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            problems.append(f"{path.name}: unreadable ({e})")
+            continue
+        events = doc.get("traceEvents") if isinstance(doc, dict) else None
+        if not isinstance(events, list) or not events:
+            problems.append(f"{path.name}: no traceEvents array")
+        elif not all(isinstance(e, dict) and "ph" in e for e in events):
+            problems.append(f"{path.name}: malformed trace events "
+                            f"(every event needs a 'ph' phase)")
+    print(f"checked {len(benches)} BENCH files, {len(traces)} trace "
+          f"artifacts: {len(problems)} problem(s)")
+    for p in problems:
+        print(f"  {p}")
+    return 1 if problems else 0
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--check-telemetry", action="store_true",
+                    help="validate emitted BENCH_*.json envelopes and "
+                         "*.trace.json artifacts instead of running "
+                         "benchmarks")
+    args = ap.parse_args(argv)
+    if args.check_telemetry:
+        raise SystemExit(check_telemetry())
+
     import fig2_utilization
     import fig5_runtime
     import fig6_ppa

@@ -19,17 +19,19 @@ by CI next to the other benchmark artifacts.
 from __future__ import annotations
 
 import argparse
-import json
+import math
 import sys
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 from repro.multicore import ChipConfig
+from repro.obs import TelemetryConfig, write_trace
+from repro.obs.attribution import BUCKETS
 from repro.serving.simbatch import (POLICIES, run_batcher, skewed_trace,
                                     synthetic_trace)
 
-from common import RESULTS, emit  # type: ignore
+from common import RESULTS, emit, write_bench  # type: ignore
 
 #: offered-load sweep: mean inter-arrival gap in epochs (small = heavy)
 LOADS = (1, 4, 16)
@@ -66,18 +68,33 @@ def run(smoke: bool = False) -> dict:
 
     skew = skewed_trace(d_model=256, heavy_prompt=256, n_light=6) if smoke \
         else skewed_trace()
+    tcfg = TelemetryConfig(enabled=True, stages=True)
+    skew_reports = {}
     for policy in POLICIES:
-        rep = run_batcher(skew, chip, policy=policy)
-        table["skewed"][policy] = _cell(rep)
+        # telemetry on: the skewed scenario doubles as the acceptance run
+        # for the Perfetto artifact + bucket-conservation property
+        rep = run_batcher(skew, chip, policy=policy, telemetry=tcfg)
+        skew_reports[policy] = rep
+        att = rep.attribution
+        occupied = sum(att.total(b) for b in BUCKETS)
+        assert math.isclose(occupied, att.occupied_cycles,
+                            rel_tol=1e-9, abs_tol=1e-6), \
+            f"attribution buckets must sum to window x cores " \
+            f"({occupied} != {att.occupied_cycles})"
+        table["skewed"][policy] = {**_cell(rep),
+                                   "attribution": att.fractions()}
     fixed = table["skewed"]["fixed"]["makespan"]
     occ = table["skewed"]["occupancy"]["makespan"]
     table["skewed"]["occupancy_vs_fixed_makespan"] = occ / fixed
     assert occ < fixed, "occupancy-aware admission must beat fixed-batch " \
                         "on the skewed trace"
 
+    # Perfetto-loadable artifact of the occupancy run (CI uploads it)
     RESULTS.mkdir(parents=True, exist_ok=True)
-    (RESULTS / "BENCH_serving_batch.json").write_text(
-        json.dumps(table, indent=2))
+    write_trace(skew_reports["occupancy"].telemetry,
+                RESULTS / "serving_skewed.trace.json")
+
+    write_bench("serving_batch", table, backend="fast")
     return table
 
 
@@ -94,11 +111,14 @@ def main(argv=None) -> None:
               f"{v['p99_latency']:>12.0f}")
         emit(f"serving_{key}", 0.0,
              f"makespan={v['makespan']:.0f};p99={v['p99_latency']:.0f}")
-    print("\n# skewed acceptance scenario")
+    print("\n# skewed acceptance scenario (attribution: "
+          + "/".join(BUCKETS) + ")")
     for policy in POLICIES:
         v = t["skewed"][policy]
+        att = "/".join(f"{v['attribution'][b]:.0%}" for b in BUCKETS)
         print(f"{policy:<12} makespan={v['makespan']:>12.0f} "
-              f"p50={v['p50_latency']:>10.0f} p99={v['p99_latency']:>10.0f}")
+              f"p50={v['p50_latency']:>10.0f} p99={v['p99_latency']:>10.0f} "
+              f"{att}")
         emit(f"serving_skewed_{policy}", 0.0,
              f"makespan={v['makespan']:.0f}")
     ratio = t["skewed"]["occupancy_vs_fixed_makespan"]

@@ -15,7 +15,6 @@ trajectory artifact CI uploads next to the multicore benchmark.
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 import time
 from pathlib import Path
@@ -30,7 +29,7 @@ from repro.core.tiling import ALG1_POLICY, lowered_stream
 from repro.core.trace import gemm_trace
 from repro.multicore import ChipConfig, simulate_chip
 
-from common import RESULTS, emit  # type: ignore
+from common import emit, write_bench  # type: ignore
 
 #: the multi-GEMM design-sweep workload (all DLRM + BERT layers of Table I;
 #: the ResNet50 layers' ~2M-instruction streams are left out to keep the CI
@@ -149,9 +148,7 @@ def run(smoke: bool = False) -> dict:
         "jax_available": fastsim.has_jax(),
         "smoke": smoke,
     }
-    RESULTS.mkdir(parents=True, exist_ok=True)
-    (RESULTS / "BENCH_sim_throughput.json").write_text(
-        json.dumps(table, indent=2))
+    write_bench("sim_throughput", table, backend="fast")
     return table
 
 

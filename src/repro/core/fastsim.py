@@ -173,7 +173,7 @@ def _result(trace: CompiledTrace, cfg: EngineConfig, t_end: float,
         n_ts=trace.n_ts, wl_skips=int(wl_skips),
         useful_macs=trace.useful_macs,
         peak_macs_per_cycle=cfg.peak_macs_per_cycle,
-        load_stall_cycles=float(bw_stall), schedules=None)
+        bw_stall_cycles=float(bw_stall), schedules=None)
 
 
 # --------------------------------------------------------------------------

@@ -50,8 +50,13 @@ class SimReport:
     utilization: float
     runtime_s: float
     macs: int
-    #: see TimingResult.load_stall_cycles -- arbiter delay, not end-to-end.
-    load_stall_cycles: float = 0.0
+    #: see TimingResult.bw_stall_cycles -- arbiter delay, not end-to-end.
+    bw_stall_cycles: float = 0.0
+
+    @property
+    def load_stall_cycles(self) -> float:
+        """Deprecated alias of :attr:`bw_stall_cycles` (pre-PR-6 name)."""
+        return self.bw_stall_cycles
 
     @property
     def macs_per_cycle(self) -> float:
@@ -69,7 +74,7 @@ def _to_report(spec: GemmSpec, cfg: EngineConfig,
         utilization=res.utilization,
         runtime_s=res.cycles / cfg.engine_clock_hz,
         macs=spec.macs,
-        load_stall_cycles=res.load_stall_cycles,
+        bw_stall_cycles=res.bw_stall_cycles,
     )
 
 

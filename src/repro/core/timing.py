@@ -117,8 +117,13 @@ class TimingResult:
     #: their consumers); the end-to-end cost of contention is
     #: ``ChipReport.bw_stall_cycles`` in :mod:`repro.multicore`.  Zero here
     #: guarantees the run is identical to an unthrottled one.
-    load_stall_cycles: float = 0.0
+    bw_stall_cycles: float = 0.0
     schedules: list[MMSchedule] | None = None
+
+    @property
+    def load_stall_cycles(self) -> float:
+        """Deprecated alias of :attr:`bw_stall_cycles` (pre-PR-6 name)."""
+        return self.bw_stall_cycles
 
     @property
     def utilization(self) -> float:
@@ -261,7 +266,7 @@ class PipelineSimulator:
             wl_skips=wl_skips,
             useful_macs=useful,
             peak_macs_per_cycle=cfg.peak_macs_per_cycle,
-            load_stall_cycles=bw_stall,
+            bw_stall_cycles=bw_stall,
             schedules=schedules,
         )
 

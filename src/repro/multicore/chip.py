@@ -49,8 +49,9 @@ from ..core.fastsim import StreamModelParams, run_cores
 from ..core.isa import Instr, Op, tile_bytes
 from ..core.tiling import (ALG1_POLICY, GemmSpec, RegPolicy, lowered_stream)
 from ..core.timing import LoadStreamModel, PipelineSimulator, TimingResult
-from ..core.trace import (OP_TL, OP_TS, CompiledTrace, compile_stream,
+from ..core.trace import (OP_MM, OP_TL, OP_TS, CompiledTrace, compile_stream,
                           compiled_trace)
+from ..obs.config import OFF, TelemetryConfig
 from .arbiter import (ArbiterTrace, SharePolicy, Span, SpanArbiter,
                       get_share_policy)
 from .partition import partition_gemm
@@ -459,6 +460,31 @@ class ChipReport:
     share_policy: str = "equal"
     #: per-core arbitration weights (all 1 under equal shares)
     core_weights: tuple[float, ...] = ()
+    #: per-core FF feed cycles (sum of ``tm``) -- the compute-bucket
+    #: numerator of the stall attribution
+    per_core_compute_cycles: tuple[float, ...] = ()
+    #: per-core end-to-end bandwidth-stall cycles (the summands of
+    #: :attr:`bw_stall_cycles`)
+    per_core_bw_stall_cycles: tuple[float, ...] = ()
+    #: full timeline telemetry (:class:`repro.obs.timeline.ChipTelemetry`);
+    #: populated only when the run was made with
+    #: ``TelemetryConfig(enabled=True)``.  Identity-compared: two
+    #: telemetry-carrying reports never compare equal.
+    telemetry: object | None = None
+
+    @property
+    def attribution(self):
+        """Stall-cycle bucket decomposition of the run
+        (:class:`repro.obs.attribution.StallAttribution`), or ``None``
+        on reports that predate the per-core compute fields."""
+        if not self.per_core_compute_cycles:
+            return None
+        from ..obs.attribution import attribute_segments
+        rows = [(i, 0.0, 0.0, self.per_core_cycles[i],
+                 self.per_core_compute_cycles[i],
+                 self.per_core_bw_stall_cycles[i])
+                for i in range(self.n_cores)]
+        return attribute_segments(self.n_cores, self.cycles, rows)
 
     @property
     def speedup(self) -> float:
@@ -513,6 +539,17 @@ class CoreCluster:
         self.chip = chip
         #: per-core arbitration weights of the last run (all 1 for equal)
         self.core_weights: tuple[float, ...] = ()
+        # -- retained state of the last run_streams call; the telemetry
+        # builders (repro.obs.timeline) read these to replay the run.
+        self.last_results: list[TimingResult] = []
+        self.last_stalls: list[float] = []
+        #: per-core stream-model parameters of each core's *final*
+        #: simulation -- for the epoch arbiter, the exact visible schedule
+        #: (``Span._vis``) the fixed point settled on, so a replay under
+        #: them reproduces the run bit for bit.
+        self.last_params: list[StreamModelParams] = []
+        self.last_streams: Sequence[Sequence[Instr]] | None = None
+        self.last_traces: Sequence[CompiledTrace] | None = None
 
     def run_streams(self, streams: Sequence[Sequence[Instr]] | None,
                     traces: Sequence[CompiledTrace] | None = None
@@ -540,6 +577,8 @@ class CoreCluster:
             if streams is None:
                 raise ValueError("need streams or compiled traces")
             traces = [compile_stream(s) for s in streams]
+        self.last_streams = streams
+        self.last_traces = traces
         if self.chip.arbitration == "static":
             return self._run_static(streams, traces)
         return self._run_epoch(streams, traces)
@@ -641,10 +680,10 @@ class CoreCluster:
         stalls = [0.0] * len(results)
         pre = unthrottled or {}
         for i, base in pre.items():
-            if results[i].load_stall_cycles != 0.0:
+            if results[i].bw_stall_cycles != 0.0:
                 stalls[i] = max(0.0, results[i].cycles - base.cycles)
         idxs = [i for i, r in enumerate(results)
-                if r.load_stall_cycles != 0.0 and i not in pre]
+                if r.bw_stall_cycles != 0.0 and i not in pre]
         if not idxs:
             return stalls
         outs = self._sim_round(
@@ -667,6 +706,9 @@ class CoreCluster:
                                                  params)]
         stalls = self._contention_stalls(streams, traces, results)
         self.core_weights = (1.0,) * len(demand)
+        self.last_results = results
+        self.last_stalls = stalls
+        self.last_params = params
         trace = ArbiterTrace(epoch_cycles=0.0, shares=(share,),
                              n_active=(n_active,), rounds=1)
         return results, stalls, trace
@@ -699,7 +741,7 @@ class CoreCluster:
             for (i, _, _), (res, lg) in zip(jobs, outs):
                 results[i] = res
                 spans[i].last_grant = lg
-                spans[i].throttled = res.load_stall_cycles != 0.0
+                spans[i].throttled = res.bw_stall_cycles != 0.0
 
         arb = SpanArbiter(chip.bw_bytes_per_cycle, E, chip.share_policy,
                           oracle=chip.backend == "reference")
@@ -707,6 +749,12 @@ class CoreCluster:
         self.core_weights = tuple(weights)
         stalls = self._contention_stalls(streams, traces, results,
                                          unthrottled)
+        self.last_results = list(results)
+        self.last_stalls = stalls
+        self.last_params = [
+            self._params(i, s._vis[0], E, s._vis[1])
+            if s._vis is not None else self._params(i)
+            for i, s in enumerate(spans)]
         return results, stalls, trace
 
 
@@ -737,12 +785,31 @@ def _streams_traces(chip: ChipConfig, shards: Sequence[Sequence[GemmSpec]]):
         for i, shard in enumerate(shards)]
 
 
+def _compute_cycles_vec(streams, traces,
+                        n_cores: int) -> tuple[float, ...]:
+    """Per-core FF feed cycles (sum of ``tm``) from whichever simulator
+    input the run used -- a vectorized sum over the cached trace arrays,
+    or one attribute pass over the already-lowered reference stream."""
+    out = []
+    for i in range(n_cores):
+        if traces is not None:
+            t = traces[i]
+            out.append(float(t.tm[t.opcode == OP_MM].sum()))
+        elif streams is not None:
+            out.append(float(sum(ins.tm for ins in streams[i]
+                                 if ins.op is Op.MM)))
+        else:
+            out.append(0.0)
+    return tuple(out)
+
+
 def _aggregate(chip: ChipConfig, workload_name: str, strategy: str,
                shards: Sequence[Sequence[GemmSpec]],
                results: Sequence[TimingResult], stalls: Sequence[float],
                single_core_cycles: float,
                trace: ArbiterTrace | None = None,
-               core_weights: tuple[float, ...] = ()) -> ChipReport:
+               core_weights: tuple[float, ...] = (), *,
+               streams=None, traces=None) -> ChipReport:
     cycles = max((r.cycles for r in results), default=0.0)
     peak = sum(spec.engine.peak_macs_per_cycle for spec in chip.core_specs)
     chip_util = (sum(r.useful_macs for r in results)
@@ -774,6 +841,9 @@ def _aggregate(chip: ChipConfig, workload_name: str, strategy: str,
         share_policy=chip.share_policy.name
         if chip.arbitration == "epoch" else "equal",
         core_weights=tuple(core_weights),
+        per_core_compute_cycles=_compute_cycles_vec(streams, traces,
+                                                    chip.n_cores),
+        per_core_bw_stall_cycles=tuple(stalls),
     )
 
 
@@ -804,21 +874,35 @@ def _single_core_cycles(chip: ChipConfig, specs: Sequence[GemmSpec]) -> float:
     return _single_core_cycles_cached(chip.single_core(), tuple(specs))
 
 
+def _attach_telemetry(report: ChipReport, cluster: CoreCluster,
+                      shards, telemetry: TelemetryConfig) -> ChipReport:
+    if not telemetry.enabled:
+        return report
+    from ..obs.timeline import build_chip_telemetry
+    return dataclasses.replace(
+        report, telemetry=build_chip_telemetry(cluster, shards, report,
+                                               telemetry))
+
+
 def partitioned_chip_report(spec: GemmSpec, chip: ChipConfig,
-                            strategy: str = "m_split") -> ChipReport:
+                            strategy: str = "m_split",
+                            telemetry: TelemetryConfig = OFF) -> ChipReport:
     """Shard one GEMM across the chip's cores and report scaling."""
     shards = partition_gemm(spec, chip.n_cores, strategy)
     streams, traces = _streams_traces(chip, shards)
     cluster = CoreCluster(chip)
     results, stalls, trace = cluster.run_streams(streams, traces)
-    return _aggregate(chip, spec.name, strategy, shards, results, stalls,
-                      _single_core_cycles(chip, [spec]), trace,
-                      cluster.core_weights)
+    report = _aggregate(chip, spec.name, strategy, shards, results, stalls,
+                        _single_core_cycles(chip, [spec]), trace,
+                        cluster.core_weights, streams=streams, traces=traces)
+    return _attach_telemetry(report, cluster, shards, telemetry)
 
 
 def simulate_chip(workload, chip: ChipConfig | None = None, *,
                   partition: str = "m_split",
-                  scheduler: str = "work_queue", **chip_kwargs) -> ChipReport:
+                  scheduler: str = "work_queue",
+                  telemetry: TelemetryConfig = OFF,
+                  **chip_kwargs) -> ChipReport:
     """Chip-level analogue of :func:`repro.core.simulate`.
 
     ``workload`` is either one :class:`GemmSpec` -- partitioned across cores
@@ -826,7 +910,8 @@ def simulate_chip(workload, chip: ChipConfig | None = None, *,
     ``scheduler`` (see :mod:`repro.multicore.scheduler`; the ``gang``
     scheduler also uses ``partition`` to split dominant GEMMs across idle
     cores).  Extra keyword arguments construct the :class:`ChipConfig` when
-    none is given.
+    none is given.  ``telemetry=TelemetryConfig(enabled=True)`` attaches a
+    full :class:`repro.obs.timeline.ChipTelemetry` to the report.
     """
     if chip is None:
         chip = ChipConfig(**chip_kwargs)
@@ -834,7 +919,7 @@ def simulate_chip(workload, chip: ChipConfig | None = None, *,
         raise TypeError(f"pass either a ChipConfig or config kwargs, not "
                         f"both: {sorted(chip_kwargs)}")
     if isinstance(workload, GemmSpec):
-        return partitioned_chip_report(workload, chip, partition)
+        return partitioned_chip_report(workload, chip, partition, telemetry)
     from .scheduler import scheduled_chip_report
     return scheduled_chip_report(list(workload), chip, scheduler,
-                                 partition=partition)
+                                 partition=partition, telemetry=telemetry)

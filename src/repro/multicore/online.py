@@ -66,6 +66,7 @@ from ..core.fastsim import SNAP_STRIDE, SimCarry, run_segment
 from ..core.tiling import GemmSpec
 from ..core.timing import PipelineSimulator, TimingResult
 from ..core.trace import CompiledTrace, compiled_trace
+from ..obs.config import OFF, TelemetryConfig
 from .arbiter import Span, SpanArbiter
 from .chip import (ChipConfig, _lower_many, demands_bandwidth,
                    shared_traffic_bytes, stream_model_params)
@@ -141,7 +142,8 @@ class OnlineChip:
     """
 
     def __init__(self, chip: ChipConfig, snap_stride: int = SNAP_STRIDE,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True,
+                 telemetry: TelemetryConfig = OFF):
         if chip.arbitration != "epoch":
             raise ValueError("the online model is the epoch arbiter's "
                              "open-arrival form; use arbitration='epoch'")
@@ -149,6 +151,13 @@ class OnlineChip:
             raise ValueError("snap_stride must be >= 1")
         self.chip = chip
         self.snap_stride = snap_stride
+        #: observability opt-in; when enabled, started segments are kept in
+        #: :attr:`history` with their lowered stream / compiled trace so the
+        #: telemetry builders can replay them after the run.
+        self.telemetry = telemetry
+        #: every started segment, in start order -- populated only with
+        #: ``telemetry.enabled`` (retirement stays free-to-prune otherwise)
+        self.history: list[Segment] = []
         self.epoch = 0
         self._E = chip.epoch_cycles
         self._budget = chip.bw_bytes_per_cycle
@@ -375,6 +384,8 @@ class OnlineChip:
                                 end=None if seg.demands else b_min,
                                 demands=seg.demands, weight=seg.weight)
                 self._active.append(seg)
+                if self.telemetry.enabled:
+                    self.history.append(seg)
                 if seg.demands:
                     self._mark_dirty(b_min)
                 else:
@@ -415,7 +426,10 @@ class OnlineChip:
                 math.ceil(f / self._E))
             self.n_retired += 1
             s._snaps = []
-            s.stream = s.trace = None
+            if not self.telemetry.enabled:
+                # telemetry replays retired segments post-hoc, so the
+                # lowered stream / compiled trace must survive retirement
+                s.stream = s.trace = None
         self._active = keep
 
     def _mark_dirty(self, from_epoch: int) -> None:
@@ -502,4 +516,4 @@ class OnlineChip:
                 self.stats["instrs_resumed_past"] += carry.i
         seg.result = res
         seg.span.last_grant = last_grant
-        seg.span.throttled = res.load_stall_cycles != 0.0
+        seg.span.throttled = res.bw_stall_cycles != 0.0

@@ -48,8 +48,9 @@ from typing import Sequence
 
 from ..core.simulator import _simulate_cached
 from ..core.tiling import GemmSpec
+from ..obs.config import OFF, TelemetryConfig
 from .chip import (ChipConfig, ChipReport, CoreCluster, _aggregate,
-                   _single_core_cycles, _streams_traces)
+                   _attach_telemetry, _single_core_cycles, _streams_traces)
 from .partition import split_ways
 
 SCHEDULERS = ("round_robin", "work_queue", "lpt", "gang")
@@ -203,7 +204,8 @@ def assign(specs: list[GemmSpec], chip: ChipConfig,
 
 def scheduled_chip_report(specs: list[GemmSpec], chip: ChipConfig,
                           scheduler: str = "work_queue",
-                          partition: str = "m_split") -> ChipReport:
+                          partition: str = "m_split",
+                          telemetry: TelemetryConfig = OFF) -> ChipReport:
     """Place ``specs`` on cores, simulate each core's concatenated stream
     under the shared-bandwidth model, and aggregate chip-level results.
 
@@ -217,6 +219,7 @@ def scheduled_chip_report(specs: list[GemmSpec], chip: ChipConfig,
     cluster = CoreCluster(chip)
     results, stalls, trace = cluster.run_streams(streams, traces)
     name = f"{specs[0].name}+{len(specs) - 1}" if len(specs) > 1 else specs[0].name
-    return _aggregate(chip, name, scheduler, shards, results, stalls,
-                      _single_core_cycles(chip, specs), trace,
-                      cluster.core_weights)
+    report = _aggregate(chip, name, scheduler, shards, results, stalls,
+                        _single_core_cycles(chip, specs), trace,
+                        cluster.core_weights, streams=streams, traces=traces)
+    return _attach_telemetry(report, cluster, shards, telemetry)

@@ -1,0 +1,44 @@
+"""Telemetry: per-core timelines, stall attribution, Perfetto export.
+
+The subsystem is strictly *post-hoc*: nothing in here adds hooks to the
+simulation loops.  Events are derived after the fact by replaying a
+compiled trace against the exact stream-model parameters a run used
+(:func:`repro.obs.record.replay_events`), so the fast backends pay zero
+overhead when telemetry is off and the reference loop stays untouched.
+
+Layers, bottom up:
+
+- :mod:`repro.obs.config` -- the :class:`TelemetryConfig` opt-in knob.
+- :mod:`repro.obs.record` -- per-instruction event replay (grant times,
+  MM sub-stage windows) over a :class:`repro.core.trace.CompiledTrace`.
+- :mod:`repro.obs.attribution` -- {compute, fill/drain, bandwidth-stall,
+  queue-wait, idle} bucket decomposition with exact conservation.
+- :mod:`repro.obs.timeline` -- chip-level assembly: one
+  :class:`SegmentTimeline` per (core, segment) plus the share/occupancy
+  traces, built from a finished closed-batch or online run.
+- :mod:`repro.obs.perfetto` / :mod:`repro.obs.render` -- exporters:
+  Chrome ``trace_event`` JSON (Perfetto-viewable) and a plain-text
+  timeline for docs/tests.
+
+See ``docs/observability.md`` for the event model and bucket definitions.
+"""
+
+from .attribution import (CoreAttribution, StallAttribution,
+                          attribute_segments, simreport_attribution,
+                          workload_compute_cycles)
+from .config import OFF, TelemetryConfig
+from .perfetto import to_trace_events, write_trace
+from .record import StreamEvents, replay_events
+from .render import render_timeline
+from .timeline import (ChipTelemetry, SegmentTimeline, build_chip_telemetry,
+                       build_online_telemetry)
+
+__all__ = [
+    "TelemetryConfig", "OFF",
+    "StreamEvents", "replay_events",
+    "CoreAttribution", "StallAttribution", "attribute_segments",
+    "simreport_attribution", "workload_compute_cycles",
+    "SegmentTimeline", "ChipTelemetry",
+    "build_chip_telemetry", "build_online_telemetry",
+    "to_trace_events", "write_trace", "render_timeline",
+]

@@ -69,6 +69,7 @@ from ..core.tiling import GemmSpec
 from ..multicore.chip import ChipConfig
 from ..multicore.online import OnlineChip
 from ..multicore.scheduler import assign_incremental
+from ..obs.config import OFF, TelemetryConfig
 
 POLICIES = ("fixed", "bandwidth", "occupancy", "predicted")
 
@@ -169,6 +170,15 @@ class BatchReport:
     arrival_epochs: tuple[int, ...]
     admit_epochs: tuple[int, ...]       # when each request entered the chip
     macs: int
+    #: :class:`repro.obs.timeline.ChipTelemetry` when the run was made with
+    #: ``telemetry=TelemetryConfig(enabled=True)``; excluded from equality
+    #: (reports with and without telemetry compare by the numbers above)
+    telemetry: object | None = dataclasses.field(default=None, compare=False)
+
+    @property
+    def attribution(self):
+        """Per-core stall attribution (None without telemetry)."""
+        return self.telemetry.attribution if self.telemetry else None
 
     def latency_percentile(self, q: float) -> float:
         """Linear-interpolated percentile of the request latencies."""
@@ -200,7 +210,8 @@ class _Batcher:
     def __init__(self, requests: Sequence[ServeRequest], chip: ChipConfig,
                  policy: str, batch_size: int, min_share: float,
                  snap_stride: int, lookahead: int = 1,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True,
+                 telemetry: TelemetryConfig = OFF):
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; "
                              f"available: {POLICIES}")
@@ -213,10 +224,12 @@ class _Batcher:
         self.batch_size = batch_size
         self.min_share = min_share
         self.lookahead = lookahead
+        self.telemetry = telemetry
         self.submitted = list(requests)     # caller order, for the report
         self.requests = sorted(requests, key=lambda r: r.arrival_epoch)
         self.sim = OnlineChip(chip, snap_stride=snap_stride,
-                              prefix_cache=prefix_cache)
+                              prefix_cache=prefix_cache,
+                              telemetry=telemetry)
         self.waiting: deque[ServeRequest] = deque()
         self.next_arrival = 0               # index into self.requests
         self.segments: dict[str, object] = {}
@@ -333,6 +346,17 @@ class _Batcher:
         latencies = [f - r.arrival_epoch * E
                      for f, r in zip(finishes, reqs)]
         first = min((r.arrival_epoch for r in reqs), default=0) * E
+        tele = None
+        if self.telemetry.enabled:
+            from ..obs.timeline import build_online_telemetry
+            names = {seg.sid: name                       # type: ignore[attr-defined]
+                     for name, seg in self.segments.items()}
+            marks = [(r.arrival_epoch * E, f"arrive {r.name}")
+                     for r in reqs]
+            marks += [(self.admit_epochs[r.name] * E, f"admit {r.name}")
+                      for r in reqs]
+            tele = build_online_telemetry(sim, self.telemetry, names=names,
+                                          marks=marks)
         return BatchReport(
             policy=self.policy,
             design=self.chip.design_name,
@@ -346,6 +370,7 @@ class _Batcher:
             arrival_epochs=tuple(r.arrival_epoch for r in reqs),
             admit_epochs=tuple(self.admit_epochs[r.name] for r in reqs),
             macs=sum(r.macs for r in reqs),
+            telemetry=tele,
         )
 
 
@@ -356,6 +381,7 @@ def run_batcher(requests: Sequence[ServeRequest],
                 snap_stride: int = SNAP_STRIDE,
                 lookahead: int = 1,
                 prefix_cache: bool = True,
+                telemetry: TelemetryConfig = OFF,
                 **chip_kwargs) -> BatchReport:
     """Serve an arrival trace through the online chip model.
 
@@ -366,7 +392,9 @@ def run_batcher(requests: Sequence[ServeRequest],
     policy's departure-forecast window.  ``prefix_cache=False`` runs the
     online arbiter in its rebuild-from-epoch-0 baseline mode (identical
     results, linearly more work -- the ``benchmarks/online_scaling.py``
-    comparison).  Extra keyword arguments construct the
+    comparison).  ``telemetry=TelemetryConfig(enabled=True)`` attaches a
+    full :class:`repro.obs.timeline.ChipTelemetry` to the report (see
+    ``docs/observability.md``).  Extra keyword arguments construct the
     :class:`ChipConfig` when none is given (cf.
     :func:`repro.multicore.simulate_chip`).
     """
@@ -381,4 +409,4 @@ def run_batcher(requests: Sequence[ServeRequest],
     if len(set(names)) != len(names):
         raise ValueError("request names must be unique")
     return _Batcher(requests, chip, policy, batch_size, min_share,
-                    snap_stride, lookahead, prefix_cache).run()
+                    snap_stride, lookahead, prefix_cache, telemetry).run()

@@ -84,8 +84,8 @@ def make_models():
 def assert_matches(ref, fast, tag=""):
     assert fast.cycles == pytest.approx(ref.cycles, rel=REL), tag
     assert fast.wl_skips == ref.wl_skips, tag
-    assert fast.load_stall_cycles == pytest.approx(
-        ref.load_stall_cycles, rel=REL, abs=1e-6), tag
+    assert fast.bw_stall_cycles == pytest.approx(
+        ref.bw_stall_cycles, rel=REL, abs=1e-6), tag
     assert (fast.n_mm, fast.n_tl, fast.n_ts) == (ref.n_mm, ref.n_tl,
                                                  ref.n_ts), tag
     assert fast.useful_macs == pytest.approx(ref.useful_macs), tag
@@ -340,8 +340,8 @@ def test_run_segment_resume_parity():
         assert s2.i > s1.i and s2.horizon >= s1.horizon
     for s in snaps[::4]:
         r2, lg2, _ = run_segment(trace, cfg, pa, carry=s)
-        assert (r2.cycles, lg2, r2.wl_skips, r2.load_stall_cycles) == \
-            (ra.cycles, lga, ra.wl_skips, ra.load_stall_cycles), s.i
+        assert (r2.cycles, lg2, r2.wl_skips, r2.bw_stall_cycles) == \
+            (ra.cycles, lga, ra.wl_skips, ra.bw_stall_cycles), s.i
     resumed_any = False
     for x in (8, 16, 24):
         shares_b = shares_a[:x] + tuple(v * 0.5 for v in shares_a[x:])
@@ -357,8 +357,8 @@ def test_run_segment_resume_parity():
             continue
         resumed_any = True
         r2, lg2, _ = run_segment(trace, cfg, pb, carry=usable[-1])
-        assert (r2.cycles, lg2, r2.wl_skips, r2.load_stall_cycles) == \
-            (rb.cycles, lgb, rb.wl_skips, rb.load_stall_cycles), x
+        assert (r2.cycles, lg2, r2.wl_skips, r2.bw_stall_cycles) == \
+            (rb.cycles, lgb, rb.wl_skips, rb.bw_stall_cycles), x
     assert resumed_any          # the scenario must actually exercise resume
 
 
