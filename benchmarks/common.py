@@ -1,5 +1,12 @@
 """Shared benchmark plumbing: CSV emission, fingerprinted result caching,
-and the common ``BENCH_*.json`` envelope every benchmark emits through."""
+and the common ``BENCH_*.json`` envelope every benchmark emits through.
+
+Importing this module also puts ``<repo>/src`` on ``sys.path`` (resolved
+from this file, not the CWD), so every benchmark starts with
+``import common`` and then imports ``repro.*`` directly -- no per-script
+``sys.path.insert(0, "src")`` boilerplate that silently breaks when the
+script is launched from anywhere but the repo root.
+"""
 
 from __future__ import annotations
 
@@ -9,8 +16,13 @@ import inspect
 import json
 import platform
 import subprocess
+import sys
 import time
 from pathlib import Path
+
+_SRC = str(Path(__file__).resolve().parent.parent / "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
 
 RESULTS = Path(__file__).resolve().parent / "results"
 

@@ -6,8 +6,7 @@ against the cycle simulator (not just the closed form).
 
 from __future__ import annotations
 
-import sys
-sys.path.insert(0, "src")
+import common  # noqa: F401  -- puts <repo>/src on sys.path
 
 from repro.core.designs import EngineConfig
 from repro.core.isa import Instr, Op

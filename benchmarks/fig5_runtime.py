@@ -8,8 +8,7 @@ for the Algorithm-1 register policy and the two bracketing policies
 
 from __future__ import annotations
 
-import sys
-sys.path.insert(0, "src")
+import common  # noqa: F401  -- puts <repo>/src on sys.path
 
 import numpy as np
 

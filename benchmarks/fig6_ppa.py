@@ -4,8 +4,7 @@ simulated runtimes; reproduces 4.38x / 2.19x / 4.59x)."""
 
 from __future__ import annotations
 
-import sys
-sys.path.insert(0, "src")
+import common  # noqa: F401  -- puts <repo>/src on sys.path
 
 import numpy as np
 

@@ -6,8 +6,7 @@ granularity); large batches approach the 16/95 = 0.168 asymptote.
 
 from __future__ import annotations
 
-import sys
-sys.path.insert(0, "src")
+import common  # noqa: F401  -- puts <repo>/src on sys.path
 
 from repro.core import batch_sweep, normalized_runtime, simulate
 from repro.core.area import PAPER_BEST_NORMALIZED_RUNTIME

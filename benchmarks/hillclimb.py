@@ -28,11 +28,10 @@ import argparse
 import dataclasses
 import json
 import os
-import sys
 import time
 from pathlib import Path
 
-sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+import common  # noqa: F401  -- puts <repo>/src on sys.path
 
 RESULTS = Path(__file__).resolve().parent / "results" / "hillclimb"
 DRYRUN = Path(__file__).resolve().parent / "results" / "dryrun"

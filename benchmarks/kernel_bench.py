@@ -8,8 +8,7 @@ of the jnp reference are included as the call-overhead baseline.
 
 from __future__ import annotations
 
-import sys
-sys.path.insert(0, "src")
+import common  # noqa: F401  -- puts <repo>/src on sys.path
 
 import numpy as np
 import jax.numpy as jnp

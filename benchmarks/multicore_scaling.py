@@ -27,9 +27,7 @@ recomputes unconditionally.
 from __future__ import annotations
 
 import argparse
-import sys
-
-sys.path.insert(0, "src")
+import common  # noqa: F401  -- puts <repo>/src on sys.path
 
 import repro.core.designs
 import repro.core.fastsim

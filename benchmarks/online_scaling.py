@@ -29,11 +29,10 @@ the unified arbiter's prefix cache removes.
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 from pathlib import Path
 
-sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+import common  # noqa: F401  -- puts <repo>/src on sys.path
 
 from repro.core.fastsim import SNAP_STRIDE
 from repro.multicore import ChipConfig

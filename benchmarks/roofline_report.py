@@ -7,8 +7,7 @@ per (arch x shape) on the single-pod mesh.
 
 from __future__ import annotations
 
-import sys
-sys.path.insert(0, "src")
+import common  # noqa: F401  -- puts <repo>/src on sys.path
 
 from pathlib import Path
 

@@ -18,7 +18,38 @@ import sys
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent))
-sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+import common  # noqa: F401  -- puts <repo>/src on sys.path
+
+
+def _check_model_serving(path) -> list[str]:
+    """Payload validation for BENCH_model_serving.json beyond the envelope:
+    the per-family serving cells and the K-split acceptance demo must be
+    present and well-formed."""
+    problems: list[str] = []
+    data = json.loads(path.read_text()).get("data", {})
+    fams = data.get("families", {})
+    for family in ("dense", "moe", "ssm"):
+        row = fams.get(family)
+        if not isinstance(row, dict):
+            problems.append(f"{path.name}: missing family {family!r}")
+            continue
+        for chip in ("rasa4", "base4", "mixed"):
+            cell = row.get(chip)
+            if not isinstance(cell, dict) or not all(
+                    isinstance(cell.get(k), (int, float))
+                    for k in ("makespan", "p50_latency", "p99_latency")):
+                problems.append(f"{path.name}: {family}/{chip} cell "
+                                f"missing makespan/p50/p99")
+    demo = data.get("k_split_demo", {})
+    m = demo.get("m_split", {}).get("speedup")
+    k = demo.get("k_split", {}).get("speedup")
+    if not (isinstance(m, (int, float)) and abs(m - 1.0) < 1e-6):
+        problems.append(f"{path.name}: k_split_demo m_split speedup "
+                        f"must be 1.0 (got {m})")
+    if not (isinstance(k, (int, float)) and 1.0 < k < 4.0):
+        problems.append(f"{path.name}: k_split_demo k_split speedup "
+                        f"must scale sublinearly past 1 core (got {k})")
+    return problems
 
 
 def check_telemetry() -> int:
@@ -28,6 +59,8 @@ def check_telemetry() -> int:
     benches = sorted(RESULTS.glob("BENCH_*.json"))
     for path in benches:
         problems += validate_bench(path)
+        if path.name == "BENCH_model_serving.json":
+            problems += _check_model_serving(path)
     traces = sorted(RESULTS.glob("*.trace.json"))
     for path in traces:
         try:

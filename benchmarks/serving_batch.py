@@ -20,10 +20,9 @@ from __future__ import annotations
 
 import argparse
 import math
-import sys
 from pathlib import Path
 
-sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+import common  # noqa: F401  -- puts <repo>/src on sys.path
 
 from repro.multicore import ChipConfig
 from repro.obs import TelemetryConfig, write_trace

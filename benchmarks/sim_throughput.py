@@ -15,11 +15,10 @@ trajectory artifact CI uploads next to the multicore benchmark.
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 from pathlib import Path
 
-sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+import common  # noqa: F401  -- puts <repo>/src on sys.path
 
 from repro.core import (TABLE_I, get_design, simulate, sweep_workload,
                         PipelineSimulator)

@@ -100,6 +100,81 @@ class GemmSpec:
                 math.ceil(self.N / tile_n))
 
 
+@dataclasses.dataclass(frozen=True)
+class ReduceSpec:
+    """Cross-core reduction of ``ways`` partial C matrices into one.
+
+    Emitted by the K-split partitioner: each of the ``ways`` K-shards
+    produces a full [M, N] fp32 partial, and the hosting core merges them
+    with element-wise adds.  The merge runs on the core's vector unit, not
+    the systolic array, so a ``ReduceSpec`` lowers to a pure memory stream
+    -- ``ways`` ``rasa_tl`` loads plus one ``rasa_ts`` store per C tile, no
+    ``rasa_mm`` -- and its cost is the load/store port time plus whatever
+    the shared-bandwidth arbiter charges for the (ways + 1) x M x N x 4
+    bytes of reduction traffic.  ``macs`` is 0: a reduction adds no
+    multiply work, so MAC conservation across a K-split holds exactly.
+    """
+
+    name: str
+    M: int
+    N: int
+    ways: int
+
+    def __post_init__(self):
+        if self.ways < 2:
+            raise ValueError("a reduction needs at least 2 partials")
+
+    @property
+    def macs(self) -> int:
+        return 0
+
+    @property
+    def flops(self) -> int:
+        #: element-wise adds of the merge ((ways - 1) per C element)
+        return (self.ways - 1) * self.M * self.N
+
+    @property
+    def bytes_moved(self) -> int:
+        """fp32 traffic of the merge: ``ways`` partials in, one result out."""
+        return (self.ways + 1) * self.M * self.N * 4
+
+    def tiles(self, tile_m: int = TILE_M, tile_k: int = TILE_K,
+              tile_n: int = TILE_N) -> tuple[int, int, int]:
+        """C-tile grid as an ``(mt, kt, nt)`` triple; ``kt`` is 0 so the
+        ``mt * kt * nt`` rasa_mm cache guards see a reduction's true MM
+        count (zero)."""
+        return (math.ceil(self.M / tile_m), 0, math.ceil(self.N / tile_n))
+
+
+def lower_reduce(spec: ReduceSpec, policy: RegPolicy = ALG1_POLICY,
+                 tile_m: int = TILE_M, tile_n: int = TILE_N
+                 ) -> Iterator[Instr]:
+    """Yield the memory stream of a cross-core partial-sum reduction.
+
+    Per C tile: ``rasa_tl`` each of the ``ways`` fp32 partials into
+    rotating registers, then ``rasa_ts`` the merged tile.  The partial for
+    way ``p`` of tile (mi, ni) is addressed ``("C", mi, ni, p)`` -- a C-kind
+    tile, so :func:`repro.core.isa.tile_bytes` charges ``tm * tn * 4``
+    bytes, the rate the bandwidth arbiters throttle.  Edge-tile extents
+    follow ``policy.pad_tiles`` exactly like :func:`lower_gemm`.
+    """
+    mt, _, nt = spec.tiles(tile_m=tile_m, tile_n=tile_n)
+
+    def dim(i, full, tile):
+        if policy.pad_tiles:
+            return tile
+        return min(tile, full - i * tile)
+
+    for ni in range(nt):
+        for mi in range(mt):
+            tm = dim(mi, spec.M, tile_m)
+            tn = dim(ni, spec.N, tile_n)
+            for p in range(spec.ways):
+                yield Instr(Op.TL, dst=p % NUM_TREGS,
+                            addr=("C", mi, ni, p), tm=tm, tn=tn)
+            yield Instr(Op.TS, src1=0, addr=("C", mi, ni), tm=tm, tn=tn)
+
+
 def lower_gemm(spec: GemmSpec, policy: RegPolicy = ALG1_POLICY,
                tile_m: int = TILE_M, tile_k: int = TILE_K,
                tile_n: int = TILE_N) -> Iterator[Instr]:
@@ -197,15 +272,24 @@ def lower_gemm(spec: GemmSpec, policy: RegPolicy = ALG1_POLICY,
 _STREAM_CACHE_MAX_MM = 150_000
 
 
+def lower_spec(spec, policy: RegPolicy = ALG1_POLICY) -> Iterator[Instr]:
+    """Lower one workload op: a :class:`GemmSpec` through
+    :func:`lower_gemm`, a :class:`ReduceSpec` through
+    :func:`lower_reduce`."""
+    if isinstance(spec, ReduceSpec):
+        return lower_reduce(spec, policy)
+    return lower_gemm(spec, policy)
+
+
 @functools.lru_cache(maxsize=256)
-def _lowered_stream_cached(spec: GemmSpec,
+def _lowered_stream_cached(spec,
                            policy: RegPolicy) -> tuple[Instr, ...]:
-    return tuple(lower_gemm(spec, policy))
+    return tuple(lower_spec(spec, policy))
 
 
-def lowered_stream(spec: GemmSpec,
+def lowered_stream(spec,
                    policy: RegPolicy = ALG1_POLICY) -> tuple[Instr, ...]:
-    """Memoized :func:`lower_gemm`: one lowering per ``(spec, policy)``.
+    """Memoized :func:`lower_spec`: one lowering per ``(spec, policy)``.
 
     Design sweeps, scheduler cost probes and arbiter relaxation rounds all
     re-simulate the same stream; lowering it once per key removes the
@@ -213,8 +297,10 @@ def lowered_stream(spec: GemmSpec,
     ``_STREAM_CACHE_MAX_MM``) are regenerated instead of cached.
     """
     mt, kt, nt = spec.tiles()
-    if mt * kt * nt > _STREAM_CACHE_MAX_MM:
-        return tuple(lower_gemm(spec, policy))
+    # GEMMs are guarded by their rasa_mm count; reductions (kt == 0, no
+    # rasa_mm at all) by their C-tile count, the driver of stream length.
+    if mt * (kt or 1) * nt > _STREAM_CACHE_MAX_MM:
+        return tuple(lower_spec(spec, policy))
     return _lowered_stream_cached(spec, policy)
 
 

@@ -471,6 +471,9 @@ class ChipReport:
     #: ``TelemetryConfig(enabled=True)``.  Identity-compared: two
     #: telemetry-carrying reports never compare equal.
     telemetry: object | None = None
+    #: inference phase of the workload ("prefill" / "decode" for compiled
+    #: model workloads, "" for hand-written spec lists)
+    phase: str = ""
 
     @property
     def attribution(self):
@@ -809,7 +812,7 @@ def _aggregate(chip: ChipConfig, workload_name: str, strategy: str,
                single_core_cycles: float,
                trace: ArbiterTrace | None = None,
                core_weights: tuple[float, ...] = (), *,
-               streams=None, traces=None) -> ChipReport:
+               streams=None, traces=None, phase: str = "") -> ChipReport:
     cycles = max((r.cycles for r in results), default=0.0)
     peak = sum(spec.engine.peak_macs_per_cycle for spec in chip.core_specs)
     chip_util = (sum(r.useful_macs for r in results)
@@ -844,6 +847,7 @@ def _aggregate(chip: ChipConfig, workload_name: str, strategy: str,
         per_core_compute_cycles=_compute_cycles_vec(streams, traces,
                                                     chip.n_cores),
         per_core_bw_stall_cycles=tuple(stalls),
+        phase=phase,
     )
 
 
@@ -905,10 +909,12 @@ def simulate_chip(workload, chip: ChipConfig | None = None, *,
                   **chip_kwargs) -> ChipReport:
     """Chip-level analogue of :func:`repro.core.simulate`.
 
-    ``workload`` is either one :class:`GemmSpec` -- partitioned across cores
-    with ``partition`` -- or a sequence of specs, scheduled with
-    ``scheduler`` (see :mod:`repro.multicore.scheduler`; the ``gang``
-    scheduler also uses ``partition`` to split dominant GEMMs across idle
+    ``workload`` is one :class:`GemmSpec` -- partitioned across cores with
+    ``partition`` -- a compiled model :class:`repro.workload.Workload` --
+    scheduled with ``scheduler`` over its atomic placement units -- or a
+    sequence of specs, scheduled with ``scheduler`` (see
+    :mod:`repro.multicore.scheduler`; the ``gang``/``gang_refine``
+    schedulers also use ``partition`` to split dominant GEMMs across idle
     cores).  Extra keyword arguments construct the :class:`ChipConfig` when
     none is given.  ``telemetry=TelemetryConfig(enabled=True)`` attaches a
     full :class:`repro.obs.timeline.ChipTelemetry` to the report.
@@ -920,6 +926,12 @@ def simulate_chip(workload, chip: ChipConfig | None = None, *,
                         f"both: {sorted(chip_kwargs)}")
     if isinstance(workload, GemmSpec):
         return partitioned_chip_report(workload, chip, partition, telemetry)
+    from ..workload.compile import Workload
+    if isinstance(workload, Workload):
+        from .scheduler import scheduled_workload_report
+        return scheduled_workload_report(workload, chip, scheduler,
+                                         partition=partition,
+                                         telemetry=telemetry)
     from .scheduler import scheduled_chip_report
     return scheduled_chip_report(list(workload), chip, scheduler,
                                  partition=partition, telemetry=telemetry)

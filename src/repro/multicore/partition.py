@@ -1,11 +1,11 @@
 """GEMM partitioners: shard one GemmSpec into per-core sub-GEMMs.
 
-All strategies shard the *output* (C) space only -- K is never split, so no
-cross-core reduction traffic is modelled and every core runs an independent
-``C_i += A_i @ B_i`` lowered by the unmodified register-aware tiler.  The
-unit of distribution is the hardware tile (``TILE_M`` rows x ``TILE_N``
-cols): edge tiles go to whichever core owns them, so shard dims track the
-exact row/col extents and the simulated FF stages of edge tiles stay exact.
+The output-space strategies shard the C space only -- every core runs an
+independent ``C_i += A_i @ B_i`` lowered by the unmodified register-aware
+tiler.  The unit of distribution is the hardware tile (``TILE_M`` rows x
+``TILE_N`` cols): edge tiles go to whichever core owns them, so shard dims
+track the exact row/col extents and the simulated FF stages of edge tiles
+stay exact.
 
 Strategies (``PARTITIONERS``):
 
@@ -18,20 +18,36 @@ Strategies (``PARTITIONERS``):
               and tile-cols j, j+pn, ...  The cyclically gathered tiles are
               modelled as one dense sub-GEMM per core (tile counts -- the
               quantity the cycle model sees -- are identical).
+  k_split  -- contiguous blocks of tile-*depths*: core *i* computes the full
+              [M, N] partial product over its K-chunk, and the core owning
+              the largest chunk (core 0) additionally runs the cross-core
+              reduction (:class:`repro.core.tiling.ReduceSpec`) that merges
+              the ``w`` partials.  This is the only axis on which a decode
+              GEMM (M = 1..16, a single tile row) can occupy more than one
+              core -- and it is never a free lunch: the reduction's
+              ``(w + 1) * M * N * 4`` bytes of fp32 partial traffic are
+              charged against the shared bandwidth budget through the same
+              arbiters as every tile load.  Timing note: the merge is
+              modelled *in-stream* on the hosting core, which is exact when
+              the K-chunks are symmetric (equal-share peers finish their
+              identical partials simultaneously, so the host starts merging
+              right when the last partial lands) and conservative-to-
+              approximate when edge tiles skew the chunks.
 
-Partitioners are core-design agnostic: shards are plain ``GemmSpec``s, so
-they flow unchanged onto heterogeneous chips (each core lowers its shard
-under its own :class:`~repro.multicore.chip.CoreSpec`); balancing a split
-*across* a BASE/RASA mix is the scheduler's job (``gang`` costs every
-shard on its target core).
+Partitioners are core-design agnostic: shards are plain ``GemmSpec``s
+(plus the one ``ReduceSpec`` of a K-split), so they flow unchanged onto
+heterogeneous chips (each core lowers its shard under its own
+:class:`~repro.multicore.chip.CoreSpec`); balancing a split *across* a
+BASE/RASA mix is the scheduler's job (``gang`` costs every shard on its
+target core).
 """
 
 from __future__ import annotations
 
-from ..core.isa import TILE_M, TILE_N
-from ..core.tiling import GemmSpec
+from ..core.isa import TILE_K, TILE_M, TILE_N
+from ..core.tiling import GemmSpec, ReduceSpec
 
-PARTITIONERS = ("m_split", "n_split", "block2d")
+PARTITIONERS = ("m_split", "n_split", "block2d", "k_split")
 
 
 def _chunk_extents(n_items: int, full: int, tile: int, n_chunks: int) -> list[int]:
@@ -76,8 +92,14 @@ def split_ways(spec: GemmSpec, ways: int, strategy: str = "m_split",
     Gang-scheduling helper: unlike :func:`partition_gemm` this drops empty
     shards (a gang never occupies a core it has no tiles for) and returns a
     flat list.  ``ways=1`` returns ``[spec]`` unchanged, so a gang of one is
-    exactly the whole-GEMM placement.
+    exactly the whole-GEMM placement.  Output-space strategies only: a
+    K-split's reduction must ride the shard that hosts it, which the flat
+    one-spec-per-core gang contract cannot express -- use
+    :func:`partition_gemm` (``partitioned_chip_report``) for K-splits.
     """
+    if strategy == "k_split":
+        raise ValueError("k_split cannot gang-split: the reduction is tied "
+                         "to its host shard; use partition_gemm instead")
     if ways == 1:
         return [spec]
     return [s for shard in partition_gemm(spec, ways, strategy,
@@ -87,18 +109,34 @@ def split_ways(spec: GemmSpec, ways: int, strategy: str = "m_split",
 
 def partition_gemm(spec: GemmSpec, n_cores: int, strategy: str = "m_split",
                    tile_m: int = TILE_M, tile_n: int = TILE_N
-                   ) -> list[list[GemmSpec]]:
+                   ) -> list[list]:
     """Shard ``spec`` across ``n_cores``; returns one shard list per core.
 
     Cores whose share of the tile grid is empty (more cores than tiles along
-    the split axis) receive an empty list and sit idle.
+    the split axis) receive an empty list and sit idle.  Shards are
+    ``GemmSpec``s; a ``k_split`` across >= 2 live chunks appends the
+    :class:`~repro.core.tiling.ReduceSpec` merging the partials to core 0's
+    list.
     """
     if n_cores < 1:
         raise ValueError("n_cores must be >= 1")
     if strategy not in PARTITIONERS:
         raise ValueError(f"unknown partitioner {strategy!r}; "
                          f"available: {PARTITIONERS}")
-    mt, _, nt = spec.tiles(tile_m=tile_m, tile_n=tile_n)
+    mt, kt, nt = spec.tiles(tile_m=tile_m, tile_n=tile_n)
+
+    if strategy == "k_split":
+        extents = _chunk_extents(kt, spec.K, TILE_K, n_cores)
+        out = [[GemmSpec(f"{spec.name}@c{core}", M=spec.M, K=k, N=spec.N)]
+               if k > 0 else []
+               for core, (k) in enumerate(extents)]
+        live = sum(1 for k in extents if k > 0)
+        if live > 1:
+            # core 0 owns the largest K-chunk (contiguous chunking hands
+            # extras to early cores), so the merge rides its stream
+            out[0].append(ReduceSpec(f"{spec.name}@reduce",
+                                     M=spec.M, N=spec.N, ways=live))
+        return out
 
     if strategy == "m_split":
         shards = [(m, spec.N) for m in _chunk_extents(mt, spec.M, tile_m, n_cores)]

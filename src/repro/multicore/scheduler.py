@@ -27,6 +27,20 @@ One model layer = one GEMM; a workload is the list of layer GEMMs (e.g.
                  combined partition x schedule policy: a dominant GEMM
                  that would leave cores idle under whole-GEMM LPT gets
                  gang-split across them.
+  gang_refine -- gang followed by malleable-width refinement: the greedy
+                 width vector is hill-climbed (grow/shrink one GEMM's gang
+                 by a core per round, keep the best improving move) until
+                 the estimated makespan stops improving.  Greedy widths
+                 are myopic -- chosen against the free-at state at
+                 placement time -- so refinement wins when a later GEMM
+                 strands an earlier width choice (the pinned skewed-
+                 workload case in the tests).
+
+Workload-level scheduling (:func:`scheduled_workload_report`) goes through
+:func:`assign_units`: the items are a compiled model's *placement units*
+(:meth:`repro.workload.Workload.units`), so a MoE expert's GEMM pair lands
+on one core atomically while distinct experts spread across cores --
+expert parallelism as a scheduling consequence, not a special case.
 
 All cost estimates are **per (GEMM, core)**: on a heterogeneous chip
 (mixed :class:`~repro.multicore.chip.CoreSpec` vector) each candidate
@@ -53,7 +67,7 @@ from .chip import (ChipConfig, ChipReport, CoreCluster, _aggregate,
                    _attach_telemetry, _single_core_cycles, _streams_traces)
 from .partition import split_ways
 
-SCHEDULERS = ("round_robin", "work_queue", "lpt", "gang")
+SCHEDULERS = ("round_robin", "work_queue", "lpt", "gang", "gang_refine")
 
 
 def _estimate_cycles(spec: GemmSpec, chip: ChipConfig, core: int = 0) -> float:
@@ -188,6 +202,164 @@ def assign_incremental(items: Sequence, chip: ChipConfig,
     return out
 
 
+def _unit_cost(unit: tuple, chip: ChipConfig, core: int) -> float:
+    """Cost of placing one atomic unit (a spec tuple) on ``core``."""
+    return sum(_estimate_cycles(s, chip, core) for s in unit)
+
+
+def _unit_size(unit: tuple, chip: ChipConfig) -> float:
+    return min(_unit_cost(unit, chip, c) for c in range(chip.n_cores))
+
+
+def _unit_shards(unit: tuple, w: int, partition: str) -> list[tuple] | None:
+    """The gang shards of a unit at width ``w``, each itself a unit.
+
+    Multi-spec units (MoE placement groups) are atomic: only width 1 is
+    valid.  Returns ``None`` when the unit cannot occupy exactly ``w``
+    cores at this width (more gang slots than tiles, or an atomic group).
+    """
+    if w == 1:
+        return [unit]
+    if len(unit) != 1:
+        return None
+    shards = split_ways(unit[0], w, partition)
+    return [(s,) for s in shards] if len(shards) == w else None
+
+
+def _gang_place(order: list[tuple], widths: list[int], chip: ChipConfig,
+                partition: str) -> tuple[list[list[tuple]], list[float]] | None:
+    """Replay the deterministic gang placement at fixed per-unit widths.
+
+    Same placement rule as the greedy search (shards longest-first onto
+    the soonest-free cores); ``None`` if any width is invalid for its
+    unit.  This is the evaluation oracle the refinement hill-climb uses.
+    """
+    placed: list[list[tuple]] = [[] for _ in range(chip.n_cores)]
+    free_at = [0.0] * chip.n_cores
+    for unit, w in zip(order, widths):
+        shards = _unit_shards(unit, w, partition)
+        if shards is None:
+            return None
+        cores = sorted(range(chip.n_cores), key=lambda c: free_at[c])[:len(shards)]
+        shards = sorted(shards, key=lambda u: -_unit_size(u, chip))
+        for core, shard in zip(cores, shards):
+            placed[core].append(shard)
+            free_at[core] += _unit_cost(shard, chip, core)
+    return placed, free_at
+
+
+def _gang_greedy_widths(order: list[tuple], chip: ChipConfig,
+                        partition: str) -> list[int]:
+    """Per-unit gang widths chosen greedily (earliest estimated completion
+    given the placements made so far) -- the width vector ``gang`` commits
+    to and ``gang_refine`` starts from."""
+    n_cores = chip.n_cores
+    free_at = [0.0] * n_cores
+    widths: list[int] = []
+    for unit in order:
+        best: tuple[float, int] | None = None
+        best_placement: list[tuple[int, tuple]] = []
+        for w in range(1, n_cores + 1):
+            shards = _unit_shards(unit, w, partition)
+            if shards is None:
+                continue
+            cores = sorted(range(n_cores), key=lambda c: free_at[c])[:w]
+            shards = sorted(shards, key=lambda u: -_unit_size(u, chip))
+            placement = list(zip(cores, shards))
+            completion = max(free_at[c] + _unit_cost(u, chip, c)
+                             for c, u in placement)
+            if best is None or (completion, w) < best:
+                best = (completion, w)
+                best_placement = placement
+        widths.append(best[1])
+        for core, shard in best_placement:
+            free_at[core] += _unit_cost(shard, chip, core)
+    return widths
+
+
+def assign_units(units: Sequence[tuple], chip: ChipConfig,
+                 scheduler: str = "work_queue",
+                 partition: str = "m_split",
+                 refine_rounds: int = 64) -> list[list[GemmSpec]]:
+    """Place atomic *units* (spec tuples) on cores; returns per-core specs.
+
+    The unit-level generalization of :func:`assign`: a unit's specs always
+    land on one core together (a :meth:`repro.workload.Workload.units` MoE
+    placement group, or a singleton GEMM).  The whole-unit schedulers are
+    the classic rules on unit costs; ``gang`` may split *singleton* units
+    across cores exactly as the flat scheduler does, and ``gang_refine``
+    additionally revisits the greedy per-GEMM gang widths after placement:
+    a hill-climb shrinks/grows one unit's width (+-1) per round, keeping
+    the move that most improves the estimated makespan, until a fixpoint
+    (malleable-width gangs; the greedy width choice is myopic -- made
+    against the free-at state *at placement time* -- so a later, larger
+    unit can strand the width committed for an earlier one).
+
+    Both gang variants keep their schedule only if it beats the whole-unit
+    LPT makespan, and fall back to LPT otherwise -- splitting re-streams
+    operands, so it must pay for itself.
+    """
+    units = [tuple(u) for u in units]
+    n_cores = chip.n_cores
+    if scheduler == "round_robin":
+        out: list[list[GemmSpec]] = [[] for _ in range(n_cores)]
+        for i, unit in enumerate(units):
+            out[i % n_cores].extend(unit)
+        return out
+    if scheduler in ("work_queue", "lpt"):
+        order = units
+        if scheduler == "lpt":
+            order = sorted(units, key=lambda u: -_unit_size(u, chip))
+        out = [[] for _ in range(n_cores)]
+        free_at = [0.0] * n_cores
+        for unit in order:
+            core = min(range(n_cores),
+                       key=lambda c: free_at[c] + _unit_cost(unit, chip, c))
+            out[core].extend(unit)
+            free_at[core] += _unit_cost(unit, chip, core)
+        return out
+    if scheduler not in ("gang", "gang_refine"):
+        raise ValueError(f"unknown scheduler {scheduler!r}; "
+                         f"available: {SCHEDULERS}")
+
+    whole = assign_units(units, chip, "lpt")
+    whole_makespan = max(
+        (sum(_estimate_cycles(s, chip, c) for s in core_specs)
+         for c, core_specs in enumerate(whole) if core_specs), default=0.0)
+    if n_cores == 1:
+        return [[s for u in units for s in u]]
+
+    order = sorted(units, key=lambda u: -_unit_size(u, chip))
+    widths = _gang_greedy_widths(order, chip, partition)
+    placed, free_at = _gang_place(order, widths, chip, partition)
+
+    if scheduler == "gang_refine":
+        best_span = max(free_at)
+        for _ in range(refine_rounds):
+            move: tuple[float, int, int] | None = None
+            for i, w in enumerate(widths):
+                for cand in (w - 1, w + 1):
+                    if not 1 <= cand <= n_cores:
+                        continue
+                    trial = widths[:i] + [cand] + widths[i + 1:]
+                    res = _gang_place(order, trial, chip, partition)
+                    if res is None:
+                        continue
+                    span = max(res[1])
+                    if span < best_span and (move is None or span < move[0]):
+                        move = (span, i, cand)
+            if move is None:
+                break
+            best_span, i, cand = move
+            widths[i] = cand
+        placed, free_at = _gang_place(order, widths, chip, partition)
+
+    if max(free_at) < whole_makespan:
+        return [[s for unit in core_units for s in unit]
+                for core_units in placed]
+    return whole
+
+
 def assign(specs: list[GemmSpec], chip: ChipConfig,
            scheduler: str = "work_queue",
            partition: str = "m_split") -> list[list[GemmSpec]]:
@@ -199,6 +371,9 @@ def assign(specs: list[GemmSpec], chip: ChipConfig,
         return assign_work_queue(specs, chip.n_cores, chip, longest_first=True)
     if scheduler == "gang":
         return assign_gang(specs, chip, partition)
+    if scheduler == "gang_refine":
+        return assign_units([(s,) for s in specs], chip, "gang_refine",
+                            partition)
     raise ValueError(f"unknown scheduler {scheduler!r}; available: {SCHEDULERS}")
 
 
@@ -222,4 +397,28 @@ def scheduled_chip_report(specs: list[GemmSpec], chip: ChipConfig,
     report = _aggregate(chip, name, scheduler, shards, results, stalls,
                         _single_core_cycles(chip, specs), trace,
                         cluster.core_weights, streams=streams, traces=traces)
+    return _attach_telemetry(report, cluster, shards, telemetry)
+
+
+def scheduled_workload_report(workload, chip: ChipConfig,
+                              scheduler: str = "work_queue",
+                              partition: str = "m_split",
+                              telemetry: TelemetryConfig = OFF) -> ChipReport:
+    """Place a compiled :class:`repro.workload.Workload` on the chip.
+
+    Placement respects the workload's atomic units (MoE expert groups land
+    whole); the report carries the workload's phase so downstream consumers
+    can tell a prefill makespan from a decode one.
+    """
+    units = workload.units()
+    if not units:
+        raise ValueError("empty workload")
+    shards = assign_units(units, chip, scheduler, partition)
+    streams, traces = _streams_traces(chip, shards)
+    cluster = CoreCluster(chip)
+    results, stalls, trace = cluster.run_streams(streams, traces)
+    report = _aggregate(chip, workload.name, scheduler, shards, results,
+                        stalls, _single_core_cycles(chip, workload.specs),
+                        trace, cluster.core_weights, streams=streams,
+                        traces=traces, phase=workload.phase)
     return _attach_telemetry(report, cluster, shards, telemetry)

@@ -4,11 +4,11 @@ plus the simulated contention-aware batcher over the RASA chip model
 
 from .engine import (ServeSession, decode_state_shardings, jit_decode_step,
                      jit_prefill)
-from .simbatch import (POLICIES, BatchReport, ServeRequest, run_batcher,
-                       skewed_trace, synthetic_trace)
+from .simbatch import (POLICIES, BatchReport, ServeRequest, model_trace,
+                       run_batcher, skewed_trace, synthetic_trace)
 from .sp_decode import sp_flash_decode
 
 __all__ = ["ServeSession", "decode_state_shardings", "jit_decode_step",
            "jit_prefill", "sp_flash_decode",
            "POLICIES", "BatchReport", "ServeRequest", "run_batcher",
-           "skewed_trace", "synthetic_trace"]
+           "model_trace", "skewed_trace", "synthetic_trace"]

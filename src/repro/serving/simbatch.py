@@ -76,21 +76,27 @@ POLICIES = ("fixed", "bandwidth", "occupancy", "predicted")
 
 @dataclasses.dataclass(frozen=True)
 class ServeRequest:
-    """One serving request: a prefill GEMM plus its decode micro-GEMMs.
+    """One serving request: a prefill phase plus its decode micro-GEMMs.
 
     ``arrival_epoch`` is the scheduling epoch at whose boundary the request
     enters the arrival queue.  Lowered onto one core as a single segment:
-    decode steps of one request are sequentially dependent.
+    decode steps of one request are sequentially dependent.  ``prefill``
+    is one GEMM (the synthetic single-layer traces) or a tuple of GEMMs (a
+    compiled model's per-layer prefill stream -- see :func:`model_trace`);
+    ``decode`` likewise holds one GEMM per step, or the model's per-step
+    GEMM chain flattened across steps.
     """
 
     name: str
     arrival_epoch: int
-    prefill: GemmSpec
+    prefill: GemmSpec | tuple[GemmSpec, ...]
     decode: tuple[GemmSpec, ...] = ()
 
     @property
     def specs(self) -> tuple[GemmSpec, ...]:
-        return (self.prefill, *self.decode)
+        pf = (self.prefill,) if isinstance(self.prefill, GemmSpec) \
+            else tuple(self.prefill)
+        return (*pf, *self.decode)
 
     @property
     def macs(self) -> int:
@@ -148,6 +154,44 @@ def skewed_trace(d_model: int = 512, *, heavy_prompt: int = 512,
         tuple(GemmSpec(f"l{i}.d{j}", M=decode_batch, K=d_model, N=d_model)
               for j in range(2))) for i in range(n_light)]
     return tuple(heavy + light)
+
+
+def model_trace(arch, n_requests: int = 16, *, seed: int = 0,
+                mean_gap: int = 2, prompt_lens: Sequence[int] = (32, 64, 128),
+                decode_steps: Sequence[int] = (2, 4, 8),
+                decode_batch: int = 1,
+                options=None) -> tuple[ServeRequest, ...]:
+    """Request trace whose GEMMs come from a compiled model, not synthetic
+    shapes.
+
+    The real-model analogue of :func:`synthetic_trace`: same arrival
+    process and menu knobs, but each request's prefill is the model's
+    compiled per-layer prefill stream at its prompt length, and each decode
+    step is the compiled decode stream at ``decode_batch`` (one compile per
+    distinct ``(prompt, steps)`` point -- decode steps share specs by
+    construction, so the trace compiler lowers each distinct shape once no
+    matter the request count).  ``arch`` is a ``repro.configs`` name or a
+    :class:`repro.config.ModelConfig`; ``options`` defaults to the capped
+    two-layer projection lowering that keeps oracle-backend runs feasible.
+    """
+    from ..workload.compile import CompileOptions, compile_workload
+    if options is None:
+        options = CompileOptions(dim_cap=1024, max_layers=2)
+    name = arch if isinstance(arch, str) else arch.name
+    rng = random.Random(seed)
+    reqs, epoch = [], 0
+    for i in range(n_requests):
+        if i:
+            epoch += rng.randrange(0, 2 * mean_gap + 1)
+        prompt = rng.choice(tuple(prompt_lens))
+        steps = rng.choice(tuple(decode_steps))
+        prefill = compile_workload(arch, batch=1, seq=prompt,
+                                   phase="prefill", options=options).specs
+        step = compile_workload(arch, batch=decode_batch, seq=prompt,
+                                phase="decode", options=options).specs
+        reqs.append(ServeRequest(f"{name}.r{i}", epoch, prefill,
+                                 step * steps))
+    return tuple(reqs)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -35,14 +35,47 @@ def _skewed_workload():
 @pytest.mark.parametrize("spec", [SMALL, ODD], ids=lambda s: s.name)
 @pytest.mark.parametrize("n_cores", [1, 2, 3, 4, 8, 16])
 def test_partition_conserves_macs(strategy, spec, n_cores):
-    """Output-space sharding: per-core MACs must sum to the GEMM's MACs."""
+    """Sharding conserves MACs: per-core MACs must sum to the GEMM's MACs
+    (a K-split's ReduceSpec contributes zero -- a reduction multiplies
+    nothing)."""
     shards = partition_gemm(spec, n_cores, strategy)
     assert len(shards) == n_cores
     total = sum(s.macs for shard in shards for s in shard)
     assert total == spec.macs
-    for shard in shards:
-        for s in shard:
-            assert s.K == spec.K            # K is never split
+    gemms = [s for shard in shards for s in shard
+             if isinstance(s, GemmSpec)]
+    if strategy == "k_split":
+        assert all(s.M == spec.M and s.N == spec.N for s in gemms)
+        assert sum(s.K for s in gemms) == spec.K
+    else:
+        for s in gemms:
+            assert s.K == spec.K        # output-space: K is never split
+
+
+@pytest.mark.parametrize("n_cores", [2, 3, 4, 8])
+def test_k_split_emits_one_reduction(n_cores):
+    """A live K-split carries exactly one ReduceSpec, hosted by core 0,
+    with one way per live K-chunk."""
+    from repro.core.tiling import ReduceSpec
+    shards = partition_gemm(SMALL, n_cores, "k_split")
+    reduces = [s for shard in shards for s in shard
+               if isinstance(s, ReduceSpec)]
+    live = sum(1 for shard in shards
+               if any(isinstance(s, GemmSpec) for s in shard))
+    if live > 1:
+        assert len(reduces) == 1
+        assert reduces[0].ways == live
+        assert reduces[0].M == SMALL.M and reduces[0].N == SMALL.N
+        assert isinstance(shards[0][-1], ReduceSpec)
+    else:
+        assert not reduces
+
+
+def test_k_split_n1_is_the_unsplit_gemm():
+    """n_cores=1: one shard, same dims, no reduction."""
+    [shard] = partition_gemm(SMALL, 1, "k_split")
+    [only] = shard
+    assert (only.M, only.K, only.N) == (SMALL.M, SMALL.K, SMALL.N)
 
 
 def test_partition_more_cores_than_tiles():
@@ -70,7 +103,71 @@ def test_best_grid_prefers_square():
 
 def test_partition_rejects_unknown_strategy():
     with pytest.raises(ValueError):
-        partition_gemm(SMALL, 4, "k_split")
+        partition_gemm(SMALL, 4, "kn_split")
+
+
+def test_split_ways_rejects_k_split():
+    """Gangs place one shard per core; a K-split's reduction must ride its
+    host shard, so split_ways refuses the strategy explicitly."""
+    with pytest.raises(ValueError):
+        split_ways(SMALL, 2, "k_split")
+
+
+# ------------------------------------------------------ k_split cost model
+def test_k_split_reduction_charges_shared_budget():
+    """The reduction's partial traffic is real: tightening the chip budget
+    must lengthen a K-split run (the merge bytes queue behind the same
+    arbiter as tile loads), and a K-split is never reported cheaper than
+    the work it does -- dynamic arbitration stays <= static throughout."""
+    spec = GemmSpec("dec", 8, 4096, 512)        # decode shape: 1 tile row
+    mk = lambda bw, arb: simulate_chip(
+        spec, ChipConfig(n_cores=4, design="RASA-DMDB-WLS",
+                         bw_bytes_per_cycle=bw, arbitration=arb),
+        partition="k_split")
+    loose = mk(math.inf, "epoch")
+    tight = mk(32.0, "epoch")
+    assert tight.cycles > loose.cycles
+    assert tight.bw_stall_cycles > 0.0
+    # the merge traffic flows through the span arbiter like any tile load:
+    # the dynamic-share schedule must still dominate the frozen shares
+    for bw in (32.0, 64.0, 256.0):
+        assert mk(bw, "epoch").cycles <= mk(bw, "static").cycles, f"bw={bw}"
+
+
+def test_k_split_scales_small_m_where_m_split_cannot():
+    """The point of the partitioner: a decode GEMM with a single tile row
+    cannot occupy more than one core under m_split, but K-split spreads it
+    -- and still pays for its reduction (speedup strictly below linear)."""
+    spec = GemmSpec("dec", 8, 4096, 512)
+    chip = ChipConfig(n_cores=4, design="RASA-DMDB-WLS")
+    m = simulate_chip(spec, chip, partition="m_split")
+    k = simulate_chip(spec, chip, partition="k_split")
+    assert sum(1 for c in m.per_core_cycles if c > 0) == 1
+    assert m.speedup == pytest.approx(1.0)
+    assert sum(1 for c in k.per_core_cycles if c > 0) == 4
+    assert 1.0 < k.speedup < 4.0
+    assert k.macs == m.macs == spec.macs
+
+
+@pytest.mark.parametrize("backend", ["reference", "numpy", "jax"])
+def test_k_split_backend_parity(backend):
+    """Cross-backend parity on a K-split decode workload: the reduce
+    stream (pure TL/TS, no rasa_mm) must time identically on the oracle
+    loop and both fast backends."""
+    if backend == "jax":
+        pytest.importorskip("jax")
+    spec = GemmSpec("dec", 8, 1024, 256)
+    rep = simulate_chip(spec, ChipConfig(n_cores=4, design="RASA-WLBP",
+                                         bw_bytes_per_cycle=64.0,
+                                         backend=backend),
+                        partition="k_split")
+    ref = simulate_chip(spec, ChipConfig(n_cores=4, design="RASA-WLBP",
+                                         bw_bytes_per_cycle=64.0,
+                                         backend="reference"),
+                        partition="k_split")
+    assert rep.cycles == ref.cycles
+    assert rep.per_core_cycles == ref.per_core_cycles
+    assert rep.bw_stall_cycles == pytest.approx(ref.bw_stall_cycles)
 
 
 # ----------------------------------------------- single-core exact reduction

@@ -1,0 +1,258 @@
+"""Workload frontend: compile every ``repro.configs`` model into chip
+workloads (ISSUE 7 acceptance suite).
+
+Covers: every arch compiles for both phases; compiled workloads run
+through ``simulate_chip`` on all three backends with identical makespans;
+MoE placement groups are scheduler-atomic; repeated layers dedup to one
+compiled shape; the dimension-cap option reproduces the LLM-projection
+shapes; malleable-width gang refinement beats greedy on the pinned skewed
+workload; and real-model serving traces flow through the batcher.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.core.tiling import GemmSpec
+from repro.multicore.chip import ChipConfig, simulate_chip
+from repro.multicore.scheduler import assign_units, scheduled_workload_report
+from repro.workload import (CompileOptions, Workload, WorkloadOp,
+                            compile_workload)
+
+ARCH_NAMES = [
+    "qwen2-vl-72b", "nemotron-4-15b", "qwen3-1.7b", "gemma-2b", "gemma-7b",
+    "musicgen-large", "mamba2-130m", "grok-1-314b", "granite-moe-3b-a800m",
+    "zamba2-2.7b",
+]
+
+#: small enough for the oracle (reference) backend, big enough that every
+#: block kind still lowers at least one GEMM
+TINY = CompileOptions(dim_cap=256, max_layers=1, max_experts=2)
+
+
+def test_arch_registry_matches():
+    from repro.configs import ARCH_NAMES as REGISTRY
+    assert set(ARCH_NAMES) == set(REGISTRY)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+@pytest.mark.parametrize("phase", ["prefill", "decode"])
+def test_every_arch_compiles(arch, phase):
+    w = compile_workload(arch, batch=2, seq=32, phase=phase, options=TINY)
+    assert isinstance(w, Workload)
+    assert w.phase == phase and w.arch == arch
+    assert w.ops and w.macs > 0
+    assert all(isinstance(op, WorkloadOp) and op.spec.M >= 1 for op in w.ops)
+    # the prefill point carries batch*seq tokens through the projections,
+    # decode carries batch -- so prefill strictly outworks decode
+    other = compile_workload(arch, batch=2, seq=32,
+                             phase="decode" if phase == "prefill" else
+                             "prefill", options=TINY)
+    pre, dec = (w, other) if phase == "prefill" else (other, w)
+    assert pre.macs > dec.macs
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+@pytest.mark.parametrize("phase", ["prefill", "decode"])
+def test_backend_identical_makespans(arch, phase):
+    """Acceptance: every compiled workload runs through ``simulate_chip``
+    on all three backends with identical makespans."""
+    w = compile_workload(arch, batch=1, seq=16, phase=phase, options=TINY)
+    reports = {
+        be: simulate_chip(w, ChipConfig(n_cores=2, backend=be,
+                                        bw_bytes_per_cycle=128))
+        for be in ("reference", "numpy", "jax")
+    }
+    ref = reports["reference"]
+    assert ref.phase == phase
+    for be, rep in reports.items():
+        assert rep.cycles == pytest.approx(ref.cycles), be
+        assert rep.per_core_cycles == pytest.approx(ref.per_core_cycles), be
+        assert rep.macs == ref.macs == w.macs
+
+
+def test_unknown_phase_and_arch_raise():
+    with pytest.raises(ValueError, match="phase"):
+        compile_workload("gemma-2b", batch=1, seq=8, phase="train")
+    with pytest.raises(KeyError):
+        compile_workload("not-a-model", batch=1, seq=8)
+
+
+# ------------------------------------------------------------ dedup/caching
+def test_repeated_layers_share_specs():
+    """Spec names are canonical per block kind, so depth never multiplies
+    the distinct-shape count: the trace compiler lowers each shape once."""
+    one = compile_workload("gemma-7b", batch=4, seq=64, phase="prefill",
+                           options=CompileOptions(max_layers=1))
+    full = compile_workload("gemma-7b", batch=4, seq=64, phase="prefill")
+    assert full.n_layers > 1 and full.layers_modeled == full.n_layers
+    assert len(full.ops) == len(one.ops) * full.n_layers
+    assert {s for s, _ in full.unique_specs()} == \
+        {s for s, _ in one.unique_specs()}
+    assert all(n == full.n_layers for _, n in full.unique_specs())
+
+
+def test_dim_cap_reproduces_projection_shapes():
+    """The projection benchmark's dimension-cap heuristic is the compile
+    option now: capped dims never exceed the cap, uncapped ones match."""
+    cap = 512
+    w = compile_workload("grok-1-314b", batch=1, seq=1, phase="decode",
+                         options=CompileOptions(dim_cap=cap, max_layers=1))
+    assert all(s.K <= cap and s.N <= cap for s in w.specs)
+    raw = compile_workload("grok-1-314b", batch=1, seq=1, phase="decode",
+                           options=CompileOptions(max_layers=1))
+    assert any(s.K > cap or s.N > cap for s in raw.specs)
+    assert [s.name for s in w.specs] == [s.name for s in raw.specs]
+
+
+# --------------------------------------------------------- phase semantics
+def test_decode_is_small_m():
+    w = compile_workload("gemma-2b", batch=8, seq=512, phase="decode",
+                         options=CompileOptions(max_layers=1))
+    assert all(s.M == 8 for s in w.specs)
+    p = compile_workload("gemma-2b", batch=8, seq=512, phase="prefill",
+                         options=CompileOptions(max_layers=1))
+    assert all(s.M == 8 * 512 for s in p.specs)
+
+
+def test_ssm_decode_is_recurrent():
+    """Decode lowers the O(1) recurrent step, not the chunked scan: its
+    cost must not grow with the context length."""
+    opts = CompileOptions(max_layers=1)
+    short = compile_workload("mamba2-130m", batch=1, seq=64,
+                             phase="decode", options=opts)
+    long = compile_workload("mamba2-130m", batch=1, seq=4096,
+                            phase="decode", options=opts)
+    assert short.macs == long.macs
+    pre_short = compile_workload("mamba2-130m", batch=1, seq=64,
+                                 phase="prefill", options=opts)
+    pre_long = compile_workload("mamba2-130m", batch=1, seq=1024,
+                                phase="prefill", options=opts)
+    assert pre_long.macs > pre_short.macs
+
+
+def test_hybrid_shares_attention_at_stride():
+    """Zamba2: every layer runs the SSM block; attention + FFN only at the
+    shared-block stride."""
+    from repro.configs import get_config
+    m = get_config("zamba2-2.7b").model
+    w = compile_workload(m, batch=1, seq=16, phase="decode")
+    by_layer = {}
+    for op in w.ops:
+        by_layer.setdefault(op.layer, set()).add(op.block)
+    for layer, blocks in by_layer.items():
+        assert "ssm" in blocks
+        expect_attn = layer % m.hybrid.attn_every == 0
+        assert ("attn" in blocks) == expect_attn, layer
+
+
+# ------------------------------------------------------- placement groups
+def test_moe_groups_are_atomic_units():
+    w = compile_workload("granite-moe-3b-a800m", batch=4, seq=8,
+                         phase="decode",
+                         options=CompileOptions(dim_cap=256, max_layers=2,
+                                                max_experts=2))
+    units = w.units()
+    moe_units = [u for u in units if len(u) > 1]
+    # 2 experts per layer x 2 layers, each one up+down (+gate) unit
+    assert len(moe_units) == 4
+    assert len(units) < len(w.ops)
+    # groups never merge across experts or layers
+    groups = {op.group for op in w.ops if op.group}
+    assert len(groups) == 4
+
+
+def test_moe_units_spread_across_cores():
+    """Expert parallelism as a placement consequence: distinct expert
+    units land on distinct cores while each expert's GEMMs stay whole."""
+    w = compile_workload("granite-moe-3b-a800m", batch=4, seq=8,
+                         phase="decode",
+                         options=CompileOptions(dim_cap=256, max_layers=1,
+                                                max_experts=4))
+    chip = ChipConfig(n_cores=4, design="RASA-DMDB-WLS")
+    rep = scheduled_workload_report(w, chip, scheduler="work_queue")
+    assert rep.phase == "decode"
+    moe_cores = [c for c, names in enumerate(rep.per_core_gemms)
+                 if any(".moe." in n for n in names)]
+    assert len(moe_cores) > 1
+    # each core's moe ops form whole groups (a multiple of the group size)
+    group_len = len(next(u for u in w.units() if len(u) > 1))
+    for names in rep.per_core_gemms:
+        n_moe = sum(1 for n in names if ".moe." in n)
+        assert n_moe % group_len == 0
+
+
+def test_moe_routing_conserves_routed_tokens():
+    """max_experts folds the expert-parallel width but never drops routed
+    tokens: total expert M-rows == m_tokens * top_k regardless of cap."""
+    from repro.configs import get_config
+    m = get_config("granite-moe-3b-a800m").model
+    routed = 4 * m.moe.top_k
+    for cap in (2, 4, None):
+        w = compile_workload(m, batch=4, seq=8, phase="decode",
+                             options=CompileOptions(max_layers=1,
+                                                    max_experts=cap))
+        up_rows = sum(s.M for s in w.specs if s.name.endswith(".moe.up"))
+        assert up_rows >= routed
+        assert up_rows - routed < (cap or m.moe.n_experts)  # ceil slack
+
+
+# ----------------------------------------------------- gang_refine (pinned)
+def test_gang_refine_beats_greedy_on_skewed_workload():
+    """The pinned malleable-width case: greedy gang commits the dominant
+    GEMMs to myopic widths; the refinement hill-climb re-widens them and
+    strictly beats greedy's simulated makespan on the skewed 4-core
+    workload (and never loses elsewhere, by LPT fallback)."""
+    wl = [GemmSpec("wide", 1024, 512, 128),
+          GemmSpec("mid", 256, 1024, 64),
+          GemmSpec("deep", 16, 1024, 1024)]
+    chip = ChipConfig(n_cores=4, design="RASA-DMDB-WLS")
+    greedy = simulate_chip(wl, chip, scheduler="gang")
+    refined = simulate_chip(wl, chip, scheduler="gang_refine")
+    assert refined.cycles < greedy.cycles
+    assert refined.macs == greedy.macs == sum(s.macs for s in wl)
+
+
+def test_gang_refine_single_core_reduction():
+    wl = [GemmSpec("a", 64, 128, 64), GemmSpec("b", 32, 128, 64)]
+    one = ChipConfig(n_cores=1, design="RASA-WLBP")
+    assert assign_units([(s,) for s in wl], one, "gang_refine") == [wl]
+
+
+def test_gang_refine_never_worse_than_lpt():
+    """Fallback contract: refinement keeps its schedule only when it beats
+    whole-GEMM LPT, so it can never lose to it."""
+    wl = [GemmSpec("even", 128, 256, 256)] * 4
+    chip = ChipConfig(n_cores=4, design="RASA-DMDB-WLS")
+    lpt = simulate_chip(wl, chip, scheduler="lpt")
+    refined = simulate_chip(wl, chip, scheduler="gang_refine")
+    assert refined.cycles <= lpt.cycles + 1e-9
+
+
+# ------------------------------------------------------------ serving trace
+def test_model_trace_flows_through_batcher():
+    from repro.serving import model_trace, run_batcher
+    reqs = model_trace("qwen3-1.7b", 3, seed=1, prompt_lens=(16,),
+                       decode_steps=(2,),
+                       options=CompileOptions(dim_cap=256, max_layers=1))
+    # prefill is the compiled per-layer stream, decode the per-step chains
+    assert all(isinstance(r.prefill, tuple) and len(r.prefill) > 1
+               for r in reqs)
+    step_len = len(reqs[0].decode) // 2
+    assert reqs[0].decode[:step_len] == reqs[0].decode[step_len:]
+    rep = run_batcher(reqs, ChipConfig(n_cores=2, bw_bytes_per_cycle=128),
+                      policy="occupancy")
+    assert rep.makespan > 0 and rep.n_requests == 3
+    assert rep.macs == sum(r.macs for r in reqs)
+
+
+def test_model_trace_decode_steps_share_specs():
+    """Decode steps reuse identical specs, so the trace compiler lowers
+    one step no matter the chain length (the dedup idiom end-to-end)."""
+    from repro.serving import model_trace
+    reqs = model_trace("gemma-2b", 2, seed=0, prompt_lens=(16,),
+                       decode_steps=(4,),
+                       options=CompileOptions(dim_cap=256, max_layers=1))
+    distinct = {s for r in reqs for s in r.decode}
+    per_step = len(reqs[0].decode) // 4
+    assert len(distinct) == per_step
