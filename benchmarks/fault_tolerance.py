@@ -1,0 +1,174 @@
+"""Goodput under faults: admission policies vs. fault severity.
+
+Drives the canonical skewed 4-core serving trace (two prefill-heavy
+requests ahead of ten decode-dominated ones, ``skewed_trace``) through
+the online chip under escalating fault scenarios -- a core-down window,
+thermal bandwidth derating, a two-core outage -- once per admission
+policy, with per-class deadlines calibrated from each class's measured
+solo latency (3x: a served request that took more than three times its
+unloaded latency has missed its SLO).
+
+The ranking metric is **goodput**: MACs of requests served within their
+deadline per makespan cycle (``BatchReport.goodput_macs_per_cycle``).
+Blind fixed batching keeps its throughput under faults but serves the
+skewed tail late -- the work completes, the deadlines don't -- while the
+chip-state-aware policies route around the outage and keep goodput.  The
+acceptance floor (asserted at full scale, on the ``moderate`` scenario):
+the best resilient policy must hold **>= 1.3x** the goodput of ``fixed``.
+
+Also swept: a seedable :func:`repro.multicore.faults.random_plan` row,
+the fault-rate knob (same seed = same plan on every backend).
+
+Results go to ``benchmarks/results/BENCH_fault_tolerance.json`` (the
+``rasa-bench/1`` envelope); CI runs ``--smoke``, which shrinks the trace
+and skips the floor assertion (the ratio needs the full-size skew to be
+meaningful) but exercises every scenario x policy cell.
+
+    PYTHONPATH=src python benchmarks/fault_tolerance.py [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import common  # noqa: F401  -- puts <repo>/src on sys.path
+
+from repro.multicore import (ChipConfig, FaultPlan, bw_derate, core_down,
+                             core_up, random_plan)
+from repro.serving.simbatch import run_batcher, skewed_trace
+
+from common import emit, write_bench  # type: ignore
+
+CHIP_KW = dict(n_cores=4, design="RASA-WLBP", bw_bytes_per_cycle=128.0,
+               backend="fast", arbitration="epoch")
+
+POLICIES = ("fixed", "bandwidth", "occupancy", "predicted", "degraded")
+RESILIENT = ("bandwidth", "occupancy", "predicted", "degraded")
+MIN_GOODPUT_RATIO = 1.3     # acceptance floor, asserted at full scale
+DEADLINE_SCALE = 3.0        # deadline = 3x the class's solo latency
+ACCEPT_SCENARIO = "moderate"
+
+#: full-size and smoke-size knobs of the canonical skewed trace
+TRACE_FULL = dict(d_model=512, heavy_prompt=512, light_prompt=32,
+                  n_heavy=2, n_light=10, decode_batch=8)
+TRACE_SMOKE = dict(d_model=128, heavy_prompt=192, light_prompt=16,
+                   n_heavy=2, n_light=6, decode_batch=4)
+
+
+def _scenarios(smoke: bool) -> dict[str, FaultPlan | None]:
+    """Escalating fault severities.  Epoch numbers are placed inside the
+    trace's busy window (the full skewed run spans ~1000 epochs, the
+    smoke run ~100; the fractions below hit both)."""
+    s = 0.1 if smoke else 1.0
+    e = lambda x: max(1, round(x * s))  # noqa: E731
+    return {
+        "none": None,
+        "mild": FaultPlan((core_down(0, e(30)), core_up(0, e(300)))),
+        "moderate": FaultPlan((core_down(0, e(30)), core_up(0, e(300)),
+                               bw_derate(0.6, e(60), e(160)))),
+        "severe": FaultPlan((core_down(0, e(30)), core_up(0, e(300)),
+                             core_down(1, e(350)), core_up(1, e(650)),
+                             bw_derate(0.5, e(60), e(260)))),
+        "random": random_plan(4, seed=7, horizon=e(600),
+                              n_core_faults=1, down_epochs=e(250),
+                              n_derates=1, derate_factor=0.6,
+                              derate_epochs=e(100)),
+    }
+
+
+def run(smoke: bool = False) -> dict:
+    chip0 = ChipConfig(**CHIP_KW)
+    trace = skewed_trace(**(TRACE_SMOKE if smoke else TRACE_FULL))
+
+    # calibrate per-class deadlines from measured solo latency
+    solo_h = run_batcher(trace[:1], chip0, policy="occupancy").latencies[0]
+    light = next(r for r in trace if r.name.startswith("l"))
+    solo_l = run_batcher([light], chip0, policy="occupancy").latencies[0]
+    dl = {"h": DEADLINE_SCALE * solo_h, "l": DEADLINE_SCALE * solo_l}
+    reqs = tuple(dataclasses.replace(r, deadline=dl[r.name[0]])
+                 for r in trace)
+
+    scenarios = {}
+    for sname, plan in _scenarios(smoke).items():
+        chip = chip0 if plan is None else \
+            dataclasses.replace(chip0, fault_plan=plan)
+        row = {}
+        for pol in POLICIES:
+            rep = run_batcher(reqs, chip, policy=pol)
+            row[pol] = {
+                "goodput_macs_per_cycle": rep.goodput_macs_per_cycle,
+                "throughput_macs_per_cycle": rep.throughput_macs_per_cycle,
+                "deadline_miss_rate": rep.deadline_miss_rate,
+                "retries": rep.retries,
+                "abandoned": rep.abandoned,
+                "makespan": rep.makespan,
+                "p99_latency": rep.p99_latency
+                if rep.abandoned == 0 else None,
+            }
+        scenarios[sname] = {
+            "events": [] if plan is None else [e.label for e in plan.events],
+            "policies": row,
+        }
+
+    acc = scenarios[ACCEPT_SCENARIO]["policies"]
+    fixed_gp = acc["fixed"]["goodput_macs_per_cycle"]
+    best = max(RESILIENT, key=lambda p: acc[p]["goodput_macs_per_cycle"])
+    best_gp = acc[best]["goodput_macs_per_cycle"]
+    ratio = best_gp / fixed_gp if fixed_gp else float("inf")
+    if not smoke:
+        assert ratio >= MIN_GOODPUT_RATIO, \
+            f"resilient admission must hold >= {MIN_GOODPUT_RATIO}x the " \
+            f"goodput of blind fixed batching under the " \
+            f"{ACCEPT_SCENARIO!r} fault scenario (best {best!r} = " \
+            f"{ratio:.2f}x)"
+
+    table = {
+        "smoke": smoke,
+        "chip": dict(CHIP_KW),
+        "trace": dict(TRACE_SMOKE if smoke else TRACE_FULL),
+        "deadline_scale": DEADLINE_SCALE,
+        "deadlines": {"heavy": dl["h"], "light": dl["l"]},
+        "scenarios": scenarios,
+        "acceptance": {
+            "scenario": ACCEPT_SCENARIO,
+            "floor": MIN_GOODPUT_RATIO,
+            "fixed_goodput": fixed_gp,
+            "best_policy": best,
+            "best_goodput": best_gp,
+            "ratio": ratio,
+            "asserted": not smoke,
+        },
+    }
+    write_bench("fault_tolerance", table, backend=CHIP_KW["backend"])
+    return table
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="shrunken trace (CI smoke run; exercises every "
+                         "scenario/policy cell, skips the ratio floor)")
+    args = ap.parse_args(argv)
+    t = run(smoke=args.smoke)
+    print(f"# goodput (MACs/cycle) under faults, skewed 4-core trace"
+          f"{' [smoke]' if args.smoke else ''}")
+    print(f"{'scenario':<10}" + "".join(f"{p:>11}" for p in POLICIES)
+          + f"{'miss(fix/occ)':>15}")
+    for sname, row in t["scenarios"].items():
+        pols = row["policies"]
+        cells = "".join(
+            f"{pols[p]['goodput_macs_per_cycle']:>11.1f}" for p in POLICIES)
+        miss = (f"{pols['fixed']['deadline_miss_rate']:.2f}/"
+                f"{pols['occupancy']['deadline_miss_rate']:.2f}")
+        print(f"{sname:<10}{cells}{miss:>15}")
+    a = t["acceptance"]
+    print(f"acceptance[{a['scenario']}]: best {a['best_policy']} = "
+          f"{a['ratio']:.2f}x fixed (floor {a['floor']}x, "
+          f"asserted={a['asserted']})")
+    emit("fault_tolerance_goodput_ratio", a["ratio"] * 1e6,
+         f"best={a['best_policy']};scenario={a['scenario']}")
+
+
+if __name__ == "__main__":
+    main()

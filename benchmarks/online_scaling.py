@@ -23,19 +23,28 @@ full trace length to dominate).  Measured at the full 1000 requests:
 spend ~25 minutes in the baseline; that intractability is precisely what
 the unified arbiter's prefix cache removes.
 
+``--resume`` additionally demonstrates checkpointed long-run simulation:
+the trace is driven halfway, the chip is checkpointed
+(:meth:`OnlineChip.snapshot`), round-tripped through ``pickle``, restored,
+and driven to completion -- the restored run's makespan, share schedule
+and retirement counts must be **bit-identical** to the uninterrupted run
+(asserted; the ``resume_check`` block lands in the BENCH file).
+
     PYTHONPATH=src python benchmarks/online_scaling.py [--smoke] [-n N]
+                                                       [--resume]
 """
 
 from __future__ import annotations
 
 import argparse
+import pickle
 import time
 from pathlib import Path
 
 import common  # noqa: F401  -- puts <repo>/src on sys.path
 
 from repro.core.fastsim import SNAP_STRIDE
-from repro.multicore import ChipConfig
+from repro.multicore import ChipConfig, OnlineChip
 from repro.serving.simbatch import _Batcher, synthetic_trace
 
 from common import emit, write_bench  # type: ignore
@@ -63,7 +72,62 @@ def _run(requests, chip: ChipConfig, prefix_cache: bool):
     return rep, elapsed, {**sim.stats, "n_retired": sim.n_retired}
 
 
-def run(n_requests: int, smoke: bool = False) -> dict:
+def _drive(sim: OnlineChip, requests, start: int = 0,
+           upto_epoch: int | None = None) -> int:
+    """Submit ``requests[start:]`` round-robin at their arrival epochs,
+    stopping before the first arrival past ``upto_epoch``; returns the
+    index of the first unsubmitted request."""
+    n = sim.chip.n_cores
+    i = start
+    while i < len(requests):
+        r = requests[i]
+        if upto_epoch is not None and r.arrival_epoch > upto_epoch:
+            return i
+        if r.arrival_epoch > sim.epoch:
+            sim.advance_to(r.arrival_epoch)
+        sim.submit(i % n, r.specs)
+        i += 1
+    return i
+
+
+def resume_check(n_requests: int) -> dict:
+    """Checkpoint halfway, pickle-round-trip, restore, finish: the result
+    must be bit-identical to the uninterrupted run."""
+    requests = synthetic_trace(n_requests, **TRACE_KW)
+    chip = ChipConfig(**CHIP_KW)
+    half = requests[len(requests) // 2].arrival_epoch
+
+    straight = OnlineChip(chip, snap_stride=SNAP_STRIDE)
+    _drive(straight, requests)
+    straight.drain()
+
+    sim = OnlineChip(chip, snap_stride=SNAP_STRIDE)
+    k = _drive(sim, requests, upto_epoch=half)
+    sim.advance_to(half)
+    blob = pickle.dumps(sim.snapshot())
+    resumed = OnlineChip.restore(pickle.loads(blob))
+    del sim                              # the checkpoint stands alone
+    _drive(resumed, requests, start=k)
+    resumed.drain()
+
+    identical = (resumed.makespan == straight.makespan
+                 and resumed.share_trace == straight.share_trace
+                 and resumed.active_trace == straight.active_trace
+                 and resumed.n_retired == straight.n_retired)
+    assert identical, \
+        "restoring a checkpoint changed the simulation -- snapshot/restore " \
+        "must be bit-identical to never having checkpointed"
+    return {
+        "n_requests": n_requests,
+        "checkpoint_epoch": half,
+        "snapshot_pickle_bytes": len(blob),
+        "makespan": straight.makespan,
+        "identical": identical,
+    }
+
+
+def run(n_requests: int, smoke: bool = False,
+        resume: bool = False) -> dict:
     requests = synthetic_trace(n_requests, **TRACE_KW)
     chip = ChipConfig(**CHIP_KW)
     rep_on, t_on, stats_on = _run(requests, chip, prefix_cache=True)
@@ -95,6 +159,8 @@ def run(n_requests: int, smoke: bool = False) -> dict:
         "p50_latency": rep_on.p50_latency,
         "p99_latency": rep_on.p99_latency,
     }
+    if resume:
+        table["resume_check"] = resume_check(n_requests)
     write_bench("online_scaling", table, backend="fast")
     return table
 
@@ -107,9 +173,13 @@ def main(argv=None) -> None:
     ap.add_argument("-n", "--requests", type=int, default=None,
                     help=f"trace length (default {N_FULL}, "
                          f"smoke {N_SMOKE})")
+    ap.add_argument("--resume", action="store_true",
+                    help="also checkpoint the chip halfway, pickle "
+                         "round-trip, restore and finish -- asserting the "
+                         "result is bit-identical to the straight run")
     args = ap.parse_args(argv)
     n = args.requests or (N_SMOKE if args.smoke else N_FULL)
-    t = run(n, smoke=args.smoke)
+    t = run(n, smoke=args.smoke, resume=args.resume)
     on, off = t["prefix_cache_on"], t["prefix_cache_off"]
     print(f"# online arbiter scaling, {n} requests "
           f"(4 cores, RASA-WLBP, {CHIP_KW['bw_bytes_per_cycle']:.0f} B/cyc)")
@@ -121,6 +191,11 @@ def main(argv=None) -> None:
               f"{row['n_retired']:>9}")
     print(f"speedup: {t['speedup']:.1f}x (identical BatchReport: "
           f"{t['identical_reports']})")
+    if "resume_check" in t:
+        rc = t["resume_check"]
+        print(f"resume: checkpoint @ epoch {rc['checkpoint_epoch']} "
+              f"({rc['snapshot_pickle_bytes']} pickled bytes), restored "
+              f"run bit-identical: {rc['identical']}")
     emit("online_scaling_prefix_cache", on["seconds"] * 1e6,
          f"speedup={t['speedup']:.1f};n={n}")
 

@@ -52,6 +52,58 @@ def _check_model_serving(path) -> list[str]:
     return problems
 
 
+def _check_fault_tolerance(path) -> list[str]:
+    """Payload validation for BENCH_fault_tolerance.json: every
+    scenario x policy goodput cell plus a coherent acceptance block."""
+    problems: list[str] = []
+    data = json.loads(path.read_text()).get("data", {})
+    scenarios = data.get("scenarios", {})
+    for sname in ("none", "mild", "moderate", "severe", "random"):
+        row = scenarios.get(sname, {}).get("policies")
+        if not isinstance(row, dict):
+            problems.append(f"{path.name}: missing scenario {sname!r}")
+            continue
+        for pol, cell in row.items():
+            if not all(isinstance(cell.get(k), (int, float))
+                       for k in ("goodput_macs_per_cycle",
+                                 "throughput_macs_per_cycle",
+                                 "deadline_miss_rate", "makespan")):
+                problems.append(f"{path.name}: {sname}/{pol} cell missing "
+                                f"goodput/throughput/miss/makespan")
+    acc = data.get("acceptance", {})
+    ratio, floor = acc.get("ratio"), acc.get("floor")
+    if not isinstance(ratio, (int, float)):
+        problems.append(f"{path.name}: acceptance block missing ratio")
+    elif acc.get("asserted") and ratio < floor:
+        problems.append(f"{path.name}: asserted goodput ratio {ratio:.2f} "
+                        f"below the {floor}x floor")
+    return problems
+
+
+#: every attribution bucket a trace export may carry; fault-free exports
+#: omit fault_lost (see repro.obs.attribution.BUCKETS)
+_BUCKETS = ("compute", "fill_drain", "bw_stall", "fault_lost",
+            "queue_wait", "idle")
+
+
+def _check_trace_attribution(path, doc) -> list[str]:
+    """Conservation invariant of an exported trace's attribution rollup:
+    the buckets must sum to window x cores exactly (1e-6 relative)."""
+    other = doc.get("otherData", {})
+    att = other.get("attribution")
+    if not isinstance(att, dict):
+        return []                # pre-attribution artifact: envelope-only
+    unknown = sorted(set(att) - set(_BUCKETS))
+    if unknown:
+        return [f"{path.name}: unknown attribution bucket(s) {unknown}"]
+    occupied = other.get("window_cycles", 0) * other.get("n_cores", 0)
+    total = sum(att.values())
+    if abs(total - occupied) > 1e-6 * max(1.0, occupied):
+        return [f"{path.name}: attribution buckets sum to {total}, "
+                f"window x cores = {occupied} -- conservation violated"]
+    return []
+
+
 def check_telemetry() -> int:
     """Validate all BENCH envelopes + trace artifacts; 0 = all valid."""
     from common import RESULTS, validate_bench
@@ -61,6 +113,8 @@ def check_telemetry() -> int:
         problems += validate_bench(path)
         if path.name == "BENCH_model_serving.json":
             problems += _check_model_serving(path)
+        if path.name == "BENCH_fault_tolerance.json":
+            problems += _check_fault_tolerance(path)
     traces = sorted(RESULTS.glob("*.trace.json"))
     for path in traces:
         try:
@@ -74,6 +128,8 @@ def check_telemetry() -> int:
         elif not all(isinstance(e, dict) and "ph" in e for e in events):
             problems.append(f"{path.name}: malformed trace events "
                             f"(every event needs a 'ph' phase)")
+        if isinstance(doc, dict):
+            problems += _check_trace_attribution(path, doc)
     print(f"checked {len(benches)} BENCH files, {len(traces)} trace "
           f"artifacts: {len(problems)} problem(s)")
     for p in problems:

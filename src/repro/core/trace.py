@@ -93,6 +93,41 @@ class CompiledTrace:
             tm=ext(self.tm), macs=ext(self.macs), reusable=ext(self.reusable))
 
 
+def slice_trace(trace: CompiledTrace, k: int) -> CompiledTrace:
+    """The trace of instructions ``[k, len(trace))`` as a fresh stream.
+
+    Equivalent to ``compile_stream(stream[k:])`` (pinned by
+    ``tests/test_faults.py``) but built from array slices -- the preemption
+    remainder of a long segment must not pay a full re-lowering.  The only
+    per-instruction fact that depends on the cut is the first in-slice
+    ``rasa_mm``'s WLBP reusability: its predecessor MM is gone, so the
+    fresh engine's weight latch is empty and it must reload
+    (``reusable=False``).  Every later MM compares against an in-slice
+    predecessor with identical writes in between, so its bit is unchanged.
+    """
+    n = len(trace)
+    if not 0 <= k <= n:
+        raise ValueError(f"slice index {k} out of range for length-{n} trace")
+    if k == 0:
+        return trace
+    opcode = trace.opcode[k:]
+    tm = trace.tm[k:]
+    macs = trace.macs[k:]
+    reusable = trace.reusable[k:]
+    is_mm = opcode == OP_MM
+    mm_idx = np.flatnonzero(is_mm)
+    if len(mm_idx) and reusable[mm_idx[0]]:
+        reusable = reusable.copy()
+        reusable[mm_idx[0]] = False
+    return CompiledTrace(
+        opcode=opcode, r_dst=trace.r_dst[k:], r_a=trace.r_a[k:],
+        r_b=trace.r_b[k:], nbytes=trace.nbytes[k:], tm=tm, macs=macs,
+        reusable=reusable,
+        n_tl=int((opcode == OP_TL).sum()), n_ts=int((opcode == OP_TS).sum()),
+        n_mm=int(is_mm.sum()), useful_macs=float(macs.sum()),
+    )
+
+
 _OP_CODE = {Op.TL: OP_TL, Op.TS: OP_TS, Op.MM: OP_MM}
 _MAT_CODE = {"A": 0, "B": 1}                 # everything else is a C tile
 

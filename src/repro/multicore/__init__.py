@@ -41,7 +41,14 @@ Layers
     thin incremental client of the same span arbiter, with retired-span
     pruning for thousand-request serving traces (drives the serving
     batcher in :mod:`repro.serving.simbatch`; see
-    ``docs/serving_sim.md``).
+    ``docs/serving_sim.md``).  ``OnlineChip.snapshot()`` /
+    ``OnlineChip.restore()`` checkpoint long runs bit-exactly.
+:mod:`~repro.multicore.faults`
+    Deterministic fault injection over either client: timed ``core_down``
+    / ``core_up`` events (preemption + migration), ``bw_derate`` thermal
+    windows (scaled arbiter budgets) and ``slow_core`` DVFS throttles,
+    described by a seedable ``FaultPlan`` on ``ChipConfig.fault_plan``
+    (see ``docs/resilience.md``).
 
 Modelling assumptions (see ``docs/multicore.md`` for details)
 -------------------------------------------------------------
@@ -70,7 +77,10 @@ from .chip import (ARBITRATIONS, CHIP_BACKENDS, ChipConfig, ChipReport,
                    CoreCluster, CoreSpec, EpochBandwidthLoadModel,
                    SharedBandwidthLoadModel, partitioned_chip_report,
                    simulate_chip)
-from .online import OnlineChip, Segment
+from .faults import (EMPTY_PLAN, FAULT_KINDS, PREEMPTION_POLICIES,
+                     FaultEvent, FaultPlan, bw_derate, core_down, core_up,
+                     faulted_chip_report, random_plan, slow_core)
+from .online import OnlineChip, OnlineSnapshot, Segment
 from .partition import PARTITIONERS, partition_gemm, split_ways
 from .scheduler import (SCHEDULERS, assign, assign_incremental,
                         scheduled_chip_report)
@@ -82,7 +92,10 @@ __all__ = [
     "MAX_ARBITER_ROUNDS", "SHARE_POLICIES", "SharePolicy",
     "DemandWeightedShare", "Span", "SpanArbiter", "get_share_policy",
     "build_share_schedule", "partitioned_chip_report", "simulate_chip",
-    "OnlineChip", "Segment",
+    "OnlineChip", "OnlineSnapshot", "Segment",
+    "EMPTY_PLAN", "FAULT_KINDS", "PREEMPTION_POLICIES", "FaultEvent",
+    "FaultPlan", "bw_derate", "core_down", "core_up",
+    "faulted_chip_report", "random_plan", "slow_core",
     "PARTITIONERS", "partition_gemm", "split_ways",
     "SCHEDULERS", "assign", "assign_incremental", "scheduled_chip_report",
 ]

@@ -219,7 +219,8 @@ class SpanArbiter:
                  policy: "str | SharePolicy" = "equal", *,
                  oracle: bool = False, unthrottled_skip: bool = True,
                  prefix_cache: bool = True,
-                 max_rounds: int = MAX_ARBITER_ROUNDS):
+                 max_rounds: int = MAX_ARBITER_ROUNDS,
+                 budget_factors: Sequence[float] = ()):
         if not budget > 0:
             raise ValueError("budget must be > 0")
         if not epoch_cycles > 0:
@@ -227,6 +228,18 @@ class SpanArbiter:
         self.budget = budget
         self.epoch_cycles = epoch_cycles
         self.policy = get_share_policy(policy)
+        #: per-epoch budget multipliers (thermal/bandwidth derating);
+        #: epoch ``e`` distributes ``budget * budget_factors[e]`` among its
+        #: active spans, epochs beyond the array run at the full budget.
+        #: Trailing 1.0s are trimmed so a no-op plan is exactly ().
+        fac = tuple(float(f) for f in budget_factors)
+        while fac and fac[-1] == 1.0:
+            fac = fac[:-1]
+        if any(not (0.0 < f <= 1.0) for f in fac):
+            raise ValueError("budget_factors must all be in (0, 1]: a zero "
+                             "or negative epoch budget would starve the "
+                             "token bucket")
+        self.budget_factors = fac
         self.oracle = oracle
         #: the unthrottled skip may be disabled on its own (the online
         #: reference backend keeps the always-safe visible-schedule skip
@@ -248,7 +261,13 @@ class SpanArbiter:
     def share_trace(self) -> tuple[float, ...]:
         """Converged bytes/cycle per unit weight, per epoch."""
         b = self.budget
-        return tuple(b / w if w else b for w in self._wsum)
+        fac = self.budget_factors
+        if not fac:
+            return tuple(b / w if w else b for w in self._wsum)
+        nf = len(fac)
+        return tuple((b * fac[e] if e < nf else b) / w
+                     if w else (b * fac[e] if e < nf else b)
+                     for e, w in enumerate(self._wsum))
 
     @property
     def active_trace(self) -> tuple[int, ...]:
@@ -329,16 +348,40 @@ class SpanArbiter:
         round's everyone-active-forever assumption); for a closed span the
         tail is the full budget -- by construction every other span has
         drained beyond its horizon.
+
+        With ``budget_factors`` (thermal derating) the per-epoch budget is
+        ``b * f(e)``; an open span's prefix is extended through the whole
+        derate window so every derated epoch carries its exact factor --
+        the tails stay factor-free, which keeps the schedules pointwise
+        rising across rounds (the derate window lives entirely inside the
+        prefix, where monotonicity is argued epoch-by-epoch).
         """
         b = self.budget
         wsum = self._wsum
-        if s.end is None:
+        fac = self.budget_factors
+        if not fac:
+            if s.end is None:
+                prefix = tuple(b * s.weight / wsum[e] if wsum[e] else b
+                               for e in range(s.start, len(wsum)))
+                return prefix, b * s.weight / w_forever
             prefix = tuple(b * s.weight / wsum[e] if wsum[e] else b
-                           for e in range(s.start, len(wsum)))
-            return prefix, b * s.weight / w_forever
-        prefix = tuple(b * s.weight / wsum[e] if wsum[e] else b
-                       for e in range(s.start, s.end))
-        return prefix, b
+                           for e in range(s.start, s.end))
+            return prefix, b
+        nf = len(fac)
+        nw = len(wsum)
+
+        def share(e: int) -> float:
+            be = b * fac[e] if e < nf else b
+            # beyond the built horizon only the still-open spans are
+            # active: their weight sum is exactly w_forever
+            w = wsum[e] if e < nw else w_forever
+            return be * s.weight / w if w else be
+
+        if s.end is None:
+            hi = max(nw, nf)
+            return (tuple(share(e) for e in range(s.start, hi)),
+                    b * s.weight / w_forever)
+        return tuple(share(e) for e in range(s.start, s.end)), b
 
     # -- the fixed point ---------------------------------------------------
     def relax(self, spans: Sequence[Span], simulate: SimulateFn,

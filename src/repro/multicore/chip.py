@@ -54,6 +54,7 @@ from ..core.trace import (OP_MM, OP_TL, OP_TS, CompiledTrace, compile_stream,
 from ..obs.config import OFF, TelemetryConfig
 from .arbiter import (ArbiterTrace, SharePolicy, Span, SpanArbiter,
                       get_share_policy)
+from .faults import FaultPlan
 from .partition import partition_gemm
 
 ARBITRATIONS = ("epoch", "static")
@@ -311,6 +312,10 @@ class ChipConfig:
     share_policy: str | SharePolicy = "equal"
     #: per-core design vector; ``None`` replicates ``design``/``policy``.
     cores: tuple | None = None
+    #: deterministic fault-event schedule
+    #: (:class:`repro.multicore.faults.FaultPlan`); ``None`` -- the default
+    #: and the common case -- is a pristine chip and costs nothing.
+    fault_plan: FaultPlan | None = None
 
     def __post_init__(self):
         if self.backend not in CHIP_BACKENDS:
@@ -348,6 +353,19 @@ class ChipConfig:
         object.__setattr__(self, "n_cores", n)
         for spec in self.core_specs:
             spec.engine             # fail fast on unknown design names
+        plan = self.fault_plan
+        if plan is not None and plan.is_empty:
+            object.__setattr__(self, "fault_plan", None)
+            plan = None
+        if plan is not None:
+            if self.arbitration != "epoch":
+                raise ValueError(
+                    "fault_plan requires arbitration='epoch': the span "
+                    "arbiter is where faults are injected")
+            for e in plan.events:
+                if e.core >= n:
+                    raise ValueError(f"fault event {e.label!r} names "
+                                     f"core {e.core} on a {n}-core chip")
 
     @property
     def core_specs(self) -> tuple[CoreSpec, ...]:
@@ -412,8 +430,11 @@ class ChipConfig:
         """The one-core chip running this chip's ``core`` spec (the
         reference configuration speedups are measured against)."""
         spec = self.core_specs[core]
+        # the reference is always a pristine core: faults measure *loss*
+        # against the fault-free single-core run
         return dataclasses.replace(self, n_cores=1, cores=(spec,),
-                                   design=spec.design, policy=spec.policy)
+                                   design=spec.design, policy=spec.policy,
+                                   fault_plan=None)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -466,6 +487,22 @@ class ChipReport:
     #: per-core end-to-end bandwidth-stall cycles (the summands of
     #: :attr:`bw_stall_cycles`)
     per_core_bw_stall_cycles: tuple[float, ...] = ()
+    #: per-instance attribution rows (fault runs only): the exact
+    #: ``(core, submit, start, finish, compute, bw_stall[, fault_lost])``
+    #: tuples handed to :func:`repro.obs.attribution.attribute_segments`.
+    #: Empty on fault-free reports, where the per-core vectors above are
+    #: the rows.
+    attribution_rows: tuple = ()
+    #: segments preempted at a core_down boundary
+    n_preemptions: int = 0
+    #: segments moved off their submitted core (queued or preempted)
+    n_migrations: int = 0
+    #: busy cycles discarded by preemption (work done but not kept --
+    #: the ``fault_lost`` attribution bucket)
+    fault_lost_cycles: float = 0.0
+    #: fault instants of the run's plan, as ``(epoch, label)`` -- the
+    #: Perfetto export renders them as instant markers
+    fault_log: tuple[tuple[int, str], ...] = ()
     #: full timeline telemetry (:class:`repro.obs.timeline.ChipTelemetry`);
     #: populated only when the run was made with
     #: ``TelemetryConfig(enabled=True)``.  Identity-compared: two
@@ -480,9 +517,12 @@ class ChipReport:
         """Stall-cycle bucket decomposition of the run
         (:class:`repro.obs.attribution.StallAttribution`), or ``None``
         on reports that predate the per-core compute fields."""
+        from ..obs.attribution import attribute_segments
+        if self.attribution_rows:
+            return attribute_segments(self.n_cores, self.cycles,
+                                      self.attribution_rows)
         if not self.per_core_compute_cycles:
             return None
-        from ..obs.attribution import attribute_segments
         rows = [(i, 0.0, 0.0, self.per_core_cycles[i],
                  self.per_core_compute_cycles[i],
                  self.per_core_bw_stall_cycles[i])
@@ -540,6 +580,18 @@ class CoreCluster:
 
     def __init__(self, chip: ChipConfig):
         self.chip = chip
+        plan = chip.fault_plan
+        #: per-core speed factors (run-constant ``slow_core`` dilation;
+        #: None -- no plan / no slow cores -- keeps every path untouched).
+        #: The closed batch samples speeds at epoch 0 and holds them; plans
+        #: with timed speed changes route through the online model
+        #: (``FaultPlan.needs_online``).
+        self._speed: tuple[float, ...] | None = None
+        if plan is not None and plan.has_slow_cores:
+            self._speed = tuple(plan.speed_factor(c, 0)
+                                for c in range(chip.n_cores))
+        self._budget_factors = plan.budget_factors() if plan is not None \
+            else ()
         #: per-core arbitration weights of the last run (all 1 for equal)
         self.core_weights: tuple[float, ...] = ()
         # -- retained state of the last run_streams call; the telemetry
@@ -590,6 +642,17 @@ class CoreCluster:
     def _params(self, core: int, shares: Sequence[float] = (),
                 epoch_cycles: float = math.inf,
                 tail: float = math.inf) -> StreamModelParams:
+        if self._speed is not None:
+            f = self._speed[core]
+            if f != 1.0:
+                # dilate into the slow core's local time base: the local
+                # clock ticks at f x the chip rate, so one local cycle
+                # spans 1/f chip cycles (shares scale by 1/f) and an epoch
+                # of E chip cycles holds E*f local cycles.  _sim_round
+                # converts the local-time results back (divide by f).
+                shares = tuple(s / f for s in shares)
+                epoch_cycles = epoch_cycles * f
+                tail = tail / f
         return stream_model_params(self.chip, self.chip.core_specs[core].engine,
                                    shares, epoch_cycles, tail)
 
@@ -612,12 +675,16 @@ class CoreCluster:
                 model = p.make_model()
                 res = PipelineSimulator(cfg, load_model=model).run(stream)
                 out.append((res, model.last_grant))
-            return out
+            return self._descale(idxs, out)
         slot: dict[tuple, int] = {}
         todo_t, todo_c, todo_p = [], [], []
         lanes = []
         for t, c, p in zip(traces, cfgs, params):
-            key = (id(t), c, p)
+            # CompiledTrace is identity-hashed (eq=False), so this
+            # deduplicates same-object traces; keying on the trace itself
+            # (not id()) keeps a strong reference alive for the dict's
+            # lifetime so a recycled id can never alias two traces.
+            key = (t, c, p)
             if key not in slot:
                 slot[key] = len(todo_t)
                 todo_t.append(t)
@@ -625,7 +692,25 @@ class CoreCluster:
                 todo_p.append(p)
             lanes.append(slot[key])
         uniq = run_cores(todo_t, todo_c, todo_p, backend=self.chip.backend)
-        return [uniq[k] for k in lanes]
+        return self._descale(idxs, [uniq[k] for k in lanes])
+
+    def _descale(self, idxs: Sequence[int],
+                 outs: list[tuple[TimingResult, float]]
+                 ) -> list[tuple[TimingResult, float]]:
+        """Convert slow cores' local-time results back to chip time (see
+        ``_params``); the identity whenever no core is slowed."""
+        if self._speed is None:
+            return outs
+        scaled = []
+        for i, (res, lg) in zip(idxs, outs):
+            f = self._speed[i]
+            if f != 1.0:
+                res = dataclasses.replace(
+                    res, cycles=res.cycles / f,
+                    bw_stall_cycles=res.bw_stall_cycles / f)
+                lg = lg / f
+            scaled.append((res, lg))
+        return scaled
 
     def _demands_bandwidth(self, stream: Sequence[Instr] | None,
                            trace: CompiledTrace | None = None) -> bool:
@@ -747,7 +832,8 @@ class CoreCluster:
                 spans[i].throttled = res.bw_stall_cycles != 0.0
 
         arb = SpanArbiter(chip.bw_bytes_per_cycle, E, chip.share_policy,
-                          oracle=chip.backend == "reference")
+                          oracle=chip.backend == "reference",
+                          budget_factors=self._budget_factors)
         trace = arb.relax(spans, simulate)
         self.core_weights = tuple(weights)
         stalls = self._contention_stalls(streams, traces, results,
@@ -813,6 +899,13 @@ def _aggregate(chip: ChipConfig, workload_name: str, strategy: str,
                trace: ArbiterTrace | None = None,
                core_weights: tuple[float, ...] = (), *,
                streams=None, traces=None, phase: str = "") -> ChipReport:
+    compute = _compute_cycles_vec(streams, traces, chip.n_cores)
+    plan = chip.fault_plan
+    if plan is not None and plan.has_slow_cores:
+        # a slowed core's FF feed cycles dilate with its clock, keeping
+        # compute + stalls <= busy in chip time (attribution conservation)
+        compute = tuple(c / plan.speed_factor(i, 0)
+                        for i, c in enumerate(compute))
     cycles = max((r.cycles for r in results), default=0.0)
     peak = sum(spec.engine.peak_macs_per_cycle for spec in chip.core_specs)
     chip_util = (sum(r.useful_macs for r in results)
@@ -844,9 +937,10 @@ def _aggregate(chip: ChipConfig, workload_name: str, strategy: str,
         share_policy=chip.share_policy.name
         if chip.arbitration == "epoch" else "equal",
         core_weights=tuple(core_weights),
-        per_core_compute_cycles=_compute_cycles_vec(streams, traces,
-                                                    chip.n_cores),
+        per_core_compute_cycles=compute,
         per_core_bw_stall_cycles=tuple(stalls),
+        fault_log=tuple((e.epoch, e.label) for e in plan.events)
+        if plan is not None else (),
         phase=phase,
     )
 
@@ -888,11 +982,135 @@ def _attach_telemetry(report: ChipReport, cluster: CoreCluster,
                                                telemetry))
 
 
+def _seg_compute_cycles(seg) -> float:
+    """One online segment's FF feed cycles in chip time (preempted
+    instances are credited with their kept prefix only)."""
+    if seg.preempted_at is not None:
+        return seg.kept_compute
+    if seg.trace is not None:
+        t = seg.trace
+        return float(t.tm[t.opcode == OP_MM].sum()) / seg.speed
+    if seg.stream is not None:
+        return float(sum(ins.tm for ins in seg.stream
+                         if ins.op is Op.MM)) / seg.speed
+    return 0.0
+
+
+def assemble_online_report(sim, chip: ChipConfig, workload_name: str,
+                           strategy: str,
+                           shards: Sequence[Sequence[GemmSpec]],
+                           single_core_cycles: float,
+                           telemetry: TelemetryConfig = OFF,
+                           phase: str = "") -> ChipReport:
+    """A :class:`ChipReport` from a drained :class:`OnlineChip` history.
+
+    The closed-batch assembly path for fault plans that need the online
+    machinery (:func:`repro.multicore.faults.faulted_chip_report`).  The
+    per-instance outcomes become :attr:`ChipReport.attribution_rows` --
+    a preempted instance is busy from its start to the fault boundary,
+    credited with its kept prefix's compute and charged the rest to the
+    ``fault_lost`` bucket; its resumed remainder is a row of its own.
+    Per-instance bandwidth stalls follow the closed cluster's end-to-end
+    definition (throttled minus unthrottled makespan, clamped so
+    fill/drain stays non-negative), measured with one unthrottled re-sim
+    per distinct trace.
+    """
+    from ..core.fastsim import run_segment
+
+    E = chip.epoch_cycles
+    n = chip.n_cores
+    segs = sim.history
+    cycles = sim.makespan
+    per_core = [0.0] * n
+    per_stall = [0.0] * n
+    per_compute = [0.0] * n
+    per_macs = [0.0] * n
+    unthrottled: dict[tuple, float] = {}
+    rows = []
+    for seg in segs:
+        c = seg.core
+        finish = seg.span.start * E + seg.result.cycles
+        per_core[c] = max(per_core[c], finish)
+        comp = _seg_compute_cycles(seg)
+        per_compute[c] += comp
+        per_macs[c] += seg.result.useful_macs
+        if seg.preempted_at is not None:
+            lost = max(0.0, seg.result.cycles - comp)
+            bw = 0.0
+        else:
+            lost = 0.0
+            bw = 0.0
+            if seg.result.bw_stall_cycles != 0.0:
+                engine = chip.core_specs[c].engine
+                trace = seg.trace if seg.trace is not None \
+                    else compile_stream(seg.stream)
+                key = (trace, engine.name)
+                base = unthrottled.get(key)
+                if base is None:
+                    base = run_segment(
+                        trace, engine,
+                        stream_model_params(chip, engine))[0].cycles
+                    unthrottled[key] = base
+                busy = seg.result.cycles
+                bw = min(max(0.0, busy - base / seg.speed),
+                         max(0.0, busy - comp))
+        per_stall[c] += bw
+        rows.append((c, seg.submit_epoch * E, seg.span.start * E, finish,
+                     comp, bw, lost))
+    peak = sum(spec.engine.peak_macs_per_cycle for spec in chip.core_specs)
+    util = [per_macs[c] / (per_core[c]
+                           * chip.core_specs[c].engine.peak_macs_per_cycle)
+            if per_core[c] else 0.0 for c in range(n)]
+    plan = chip.fault_plan
+    report = ChipReport(
+        design=chip.design_name,
+        workload=workload_name,
+        strategy=strategy,
+        n_cores=n,
+        cycles=cycles,
+        single_core_cycles=single_core_cycles,
+        per_core_cycles=tuple(per_core),
+        per_core_utilization=tuple(util),
+        utilization=sum(per_macs) / (cycles * peak) if cycles else 0.0,
+        bw_stall_cycles=sum(per_stall),
+        n_mm=sum(s.result.n_mm for s in segs),
+        wl_skips=sum(s.result.wl_skips for s in segs),
+        macs=sum(int(s.macs) for shard in shards for s in shard),
+        per_core_gemms=tuple(tuple(s.name for s in shard)
+                             for shard in shards),
+        arbitration=chip.arbitration,
+        epoch_cycles=E,
+        share_trace=sim.share_trace,
+        active_trace=sim.active_trace,
+        arb_rounds=sim.stats["rounds"],
+        core_designs=tuple(spec.design for spec in chip.core_specs),
+        share_policy=chip.share_policy.name,
+        per_core_compute_cycles=tuple(per_compute),
+        per_core_bw_stall_cycles=tuple(per_stall),
+        attribution_rows=tuple(rows),
+        n_preemptions=sim.n_preempted,
+        n_migrations=sim.n_migrated,
+        fault_lost_cycles=sim.fault_lost_cycles,
+        fault_log=tuple((e.epoch, e.label) for e in plan.events)
+        if plan is not None else (),
+        phase=phase,
+    )
+    if telemetry.enabled:
+        from ..obs.timeline import build_online_telemetry
+        report = dataclasses.replace(
+            report, telemetry=build_online_telemetry(sim, telemetry))
+    return report
+
+
 def partitioned_chip_report(spec: GemmSpec, chip: ChipConfig,
                             strategy: str = "m_split",
                             telemetry: TelemetryConfig = OFF) -> ChipReport:
     """Shard one GEMM across the chip's cores and report scaling."""
     shards = partition_gemm(spec, chip.n_cores, strategy)
+    if chip.fault_plan is not None and chip.fault_plan.needs_online:
+        from .faults import faulted_chip_report
+        return faulted_chip_report(shards, chip, spec.name, strategy,
+                                   telemetry)
     streams, traces = _streams_traces(chip, shards)
     cluster = CoreCluster(chip)
     results, stalls, trace = cluster.run_streams(streams, traces)

@@ -57,15 +57,18 @@ every decision epoch and inject admitted requests with
 
 from __future__ import annotations
 
+import copy
 import dataclasses
 import math
 from collections import deque
 from typing import Sequence
 
-from ..core.fastsim import SNAP_STRIDE, SimCarry, run_segment
+from ..core.fastsim import (SNAP_STRIDE, SimCarry, completed_prefix,
+                            run_segment)
 from ..core.tiling import GemmSpec
 from ..core.timing import PipelineSimulator, TimingResult
-from ..core.trace import CompiledTrace, compiled_trace
+from ..core.trace import (OP_MM, OP_TL, OP_TS, CompiledTrace, compile_stream,
+                          compiled_trace, slice_trace)
 from ..obs.config import OFF, TelemetryConfig
 from .arbiter import Span, SpanArbiter
 from .chip import (ChipConfig, _lower_many, demands_bandwidth,
@@ -96,6 +99,25 @@ class Segment:
     result: TimingResult | None = dataclasses.field(default=None, repr=False)
     _snaps: list[SimCarry] = dataclasses.field(default_factory=list,
                                                repr=False)
+    # -- fault-injection state (see repro.multicore.faults) --
+    #: core speed factor sampled at the start boundary (slow_core events)
+    speed: float = 1.0
+    #: instruction offset of this instance within the originally submitted
+    #: stream (> 0 for a resumed preemption remainder)
+    resume_from: int = 0
+    #: sid of the preempted instance this segment resumes, if any
+    origin_sid: int | None = None
+    #: absolute cycles at which this instance was preempted (core_down)
+    preempted_at: float | None = None
+    #: instructions whose progress survived the preemption (the remainder
+    #: resumes after them; 0 under preemption="restart" / migration across
+    #: heterogeneous designs)
+    kept_instrs: int = 0
+    #: chip-cycle FF compute / useful MACs of the kept prefix -- the
+    #: telemetry attribution of the preempted instance (fault_lost bucket
+    #: absorbs the rest of its busy interval)
+    kept_compute: float = 0.0
+    kept_macs: float = 0.0
 
     @property
     def start(self) -> int | None:
@@ -143,7 +165,8 @@ class OnlineChip:
 
     def __init__(self, chip: ChipConfig, snap_stride: int = SNAP_STRIDE,
                  prefix_cache: bool = True,
-                 telemetry: TelemetryConfig = OFF):
+                 telemetry: TelemetryConfig = OFF,
+                 force_history: bool = False):
         if chip.arbitration != "epoch":
             raise ValueError("the online model is the epoch arbiter's "
                              "open-arrival form; use arbitration='epoch'")
@@ -155,19 +178,45 @@ class OnlineChip:
         #: :attr:`history` with their lowered stream / compiled trace so the
         #: telemetry builders can replay them after the run.
         self.telemetry = telemetry
-        #: every started segment, in start order -- populated only with
-        #: ``telemetry.enabled`` (retirement stays free-to-prune otherwise)
+        #: keep :attr:`history` even without telemetry -- the closed-batch
+        #: fault router (:func:`repro.multicore.faults.faulted_chip_report`)
+        #: assembles its report from the per-segment outcomes post-hoc
+        self._keep_history = telemetry.enabled or force_history
+        #: every started segment, in start order -- populated only when
+        #: history is kept (retirement stays free-to-prune otherwise)
         self.history: list[Segment] = []
         self.epoch = 0
         self._E = chip.epoch_cycles
         self._budget = chip.bw_bytes_per_cycle
         self._ref = chip.backend == "reference"
+        #: the fault plan driving core_down/up preemption, budget derating
+        #: and slow cores; ``None`` when faults are off (the common case:
+        #: every fault hook below is gated on it, so an empty plan is
+        #: arithmetic-identical to no plan at all)
+        plan = chip.fault_plan
+        self._plan = plan if plan is not None and not plan.is_empty else None
+        self._fault_events = list(self._plan.core_events) if self._plan \
+            else []
+        self._next_fault = 0
+        self._down = [False] * chip.n_cores
+        #: (epoch, label) log of applied core events (telemetry markers)
+        self.fault_log: list[tuple[int, str]] = []
+        self.n_preempted = 0
+        self.n_migrated = 0
+        #: chip cycles of discarded progress across all preemptions
+        self.fault_lost_cycles = 0.0
+        #: preempted sid -> the instance that resumed it; holds retired
+        #: resume instances strongly so :meth:`final_instance` works after
+        #: pruning (empty on fault-free runs)
+        self._resume_of: dict[int, Segment] = {}
         #: the unified relaxation engine; ``prefix_cache=False`` keeps the
         #: rebuild-from-epoch-0 baseline (and disables span pruning, which
         #: depends on the settled prefix carrying retired contributions)
         self._arb = SpanArbiter(self._budget, self._E, chip.share_policy,
                                 unthrottled_skip=not self._ref,
-                                prefix_cache=prefix_cache)
+                                prefix_cache=prefix_cache,
+                                budget_factors=self._plan.budget_factors()
+                                if self._plan else ())
         self._prune = prefix_cache
         self._queues: list[deque[Segment]] = [deque()
                                               for _ in range(chip.n_cores)]
@@ -212,6 +261,15 @@ class OnlineChip:
             raise ValueError("empty segment")
         if not 0 <= core < self.chip.n_cores:
             raise ValueError(f"core {core} out of range")
+        if self._down[core]:
+            # submissions blind to the fault state (e.g. a fixed
+            # round-robin batcher) are rerouted to the best surviving core;
+            # with every core down the work waits for a core_up
+            self._settle()
+            alt = self._pick_target()
+            if alt is not None and alt != core:
+                core = alt
+                self.n_migrated += 1
         seg = Segment(self._next_sid, core, specs, self.epoch)
         self._next_sid += 1
         core_spec = self.chip.core_specs[core]
@@ -257,11 +315,20 @@ class OnlineChip:
         self._settle()
         cands = []
         for c in range(self.chip.n_cores):
+            if self._down[c]:
+                # nothing can start here until a core_up (which is itself
+                # a candidate below); queued work on a fully-down chip
+                # must not busy-loop the driver
+                continue
             f = self._core_free_epoch(c)
             if self._queues[c]:
                 f = max(f, self._queues[c][0].submit_epoch)
             if f > self.epoch:
                 cands.append(f)
+        if self._next_fault < len(self._fault_events):
+            # pending core events change the chip's state on their own
+            # (preemption, migration, a downed queue waking up)
+            cands.append(self._fault_events[self._next_fault].epoch)
         return min(cands, default=None)
 
     def drain(self) -> None:
@@ -274,9 +341,10 @@ class OnlineChip:
 
     # ----------------------------------------------- live chip state
     def core_busy(self) -> list[bool]:
-        """Is each core occupied (running or queued work) right now?"""
+        """Is each core occupied (running or queued work) right now?
+        Downed cores read as busy -- they cannot take work."""
         self._settle()
-        return [self._core_free_epoch(c) > self.epoch
+        return [self._down[c] or self._core_free_epoch(c) > self.epoch
                 or bool(self._queues[c]) for c in range(self.chip.n_cores)]
 
     def n_active(self) -> int:
@@ -302,6 +370,9 @@ class OnlineChip:
         now = self.epoch * self._E
         out = []
         for c in range(self.chip.n_cores):
+            if self._down[c]:
+                out.append(math.inf)
+                continue
             t = max((self._finish(s) for s in self._active if s.core == c),
                     default=0.0)
             t = max(t, self._core_retired_cycles[c], now)
@@ -318,6 +389,26 @@ class OnlineChip:
         if seg.span is None or seg.result is None:
             raise RuntimeError(f"segment {seg.sid} has not started")
         return self._finish(seg)
+
+    def resume_of(self, seg: Segment) -> Segment | None:
+        """The instance that resumed ``seg`` after its preemption (None
+        for a segment that was never preempted)."""
+        return self._resume_of.get(seg.sid)
+
+    def final_instance(self, seg: Segment) -> Segment:
+        """Follow preemption-resume chains to the instance that carries
+        the logical work submitted as ``seg`` to completion.  Identity on
+        fault-free runs; the serving batcher resolves request finish
+        times through this."""
+        while seg.preempted_at is not None:
+            seg = self._resume_of[seg.sid]
+        return seg
+
+    @property
+    def down_cores(self) -> tuple[bool, ...]:
+        """Per-core offline flags under the fault plan (all False without
+        one) -- the ``degraded`` admission policy's health signal."""
+        return tuple(self._down)
 
     @property
     def makespan(self) -> float:
@@ -365,14 +456,26 @@ class OnlineChip:
         """
         while True:
             self._settle()
+            fault_at = None
+            if self._next_fault < len(self._fault_events):
+                e = self._fault_events[self._next_fault].epoch
+                if e <= upto:
+                    fault_at = e
             cands: list[tuple[int, int]] = []
             for c in range(self.chip.n_cores):
-                if not self._queues[c]:
+                if self._down[c] or not self._queues[c]:
                     continue
                 b = max(self._core_free_epoch(c),
                         self._queues[c][0].submit_epoch)
                 if b <= upto:
                     cands.append((b, c))
+            if fault_at is not None and (
+                    not cands or fault_at <= min(b for b, _ in cands)):
+                # fault events apply at the boundary *before* any start
+                # there: a core_down preempts first, a core_up makes the
+                # core a start candidate on the next sweep
+                self._process_faults(fault_at)
+                continue
             if not cands:
                 return
             b_min = min(b for b, _ in cands)
@@ -380,11 +483,13 @@ class OnlineChip:
                 if b != b_min:
                     continue
                 seg = self._queues[c].popleft()
+                if self._plan is not None:
+                    seg.speed = self._plan.speed_factor(c, b_min)
                 seg.span = Span(start=b_min,
                                 end=None if seg.demands else b_min,
                                 demands=seg.demands, weight=seg.weight)
                 self._active.append(seg)
-                if self.telemetry.enabled:
+                if self._keep_history:
                     self.history.append(seg)
                 if seg.demands:
                     self._mark_dirty(b_min)
@@ -392,6 +497,183 @@ class OnlineChip:
                     # zero shared-memory traffic: shares cannot change,
                     # only the new segment itself needs simulating
                     self._dirty = True
+
+    def _process_faults(self, epoch: int) -> None:
+        """Apply every core_down/core_up event scheduled at ``epoch``
+        (in plan order; the caller guarantees settled state)."""
+        while (self._next_fault < len(self._fault_events)
+               and self._fault_events[self._next_fault].epoch == epoch):
+            ev = self._fault_events[self._next_fault]
+            self._next_fault += 1
+            self.fault_log.append((epoch, ev.label))
+            if ev.kind == "core_down":
+                self._core_down(ev.core, epoch)
+            else:
+                self._down[ev.core] = False
+
+    def _core_down(self, core: int, epoch: int) -> None:
+        """Take ``core`` offline: preempt its in-flight segment at this
+        boundary and migrate its queue to the surviving cores."""
+        self._down[core] = True
+        T = epoch * self._E
+        changed = False
+        for seg in list(self._active):
+            if (seg.core == core and seg.preempted_at is None
+                    and self._finish(seg) > T):
+                changed |= self._preempt(seg, epoch)
+        q = self._queues[core]
+        if q:
+            moved = list(q)
+            q.clear()
+            for seg in moved:
+                self._migrate_queued(seg)
+        if changed:
+            self._mark_dirty(epoch)
+
+    def _pick_target(self) -> int | None:
+        """The best surviving core for displaced work: earliest free, then
+        shortest queue, then lowest index (deterministic).  None when every
+        core is down."""
+        best_key = best = None
+        for c in range(self.chip.n_cores):
+            if self._down[c]:
+                continue
+            key = (self._core_free_epoch(c), len(self._queues[c]), c)
+            if best_key is None or key < best_key:
+                best_key, best = key, c
+        return best
+
+    def _preempt(self, seg: Segment, epoch: int) -> bool:
+        """Cut a running segment at the ``epoch`` boundary (its core went
+        down) and requeue the remainder on the best surviving core.
+
+        The cut is the deterministic :func:`completed_prefix` replay of
+        the segment's settled visible schedule: instructions fully retired
+        by the boundary survive, rounded down to the ``SimCarry`` snapshot
+        stride under ``preemption="resume"`` (state is recovered from the
+        latest checkpoint, not from the dying core's registers) or
+        discarded entirely under ``"restart"``.  Migration to a different
+        core design always restarts -- pipeline state cannot cross
+        engines.  Returns True when the preempted span's activity shrank
+        (the caller re-relaxes from ``epoch``).
+        """
+        span = seg.span
+        engine = self.chip.core_specs[seg.core].engine
+        T = epoch * self._E
+        f = seg.speed
+        prefix, tail = span._vis if span._vis is not None \
+            else ((), math.inf)
+        if f != 1.0:
+            params = stream_model_params(self.chip, engine,
+                                         tuple(s / f for s in prefix),
+                                         self._E * f, tail / f)
+        else:
+            params = stream_model_params(self.chip, engine, prefix,
+                                         self._E, tail)
+        trace = seg.trace if seg.trace is not None \
+            else compile_stream(seg.stream)
+        n_done = completed_prefix(trace, engine, params,
+                                  (T - span.start * self._E) * f)
+        target = self._pick_target()
+        if target is None:
+            target = seg.core        # all cores down: wait for a core_up
+        same_design = (self.chip.core_specs[target]
+                       == self.chip.core_specs[seg.core])
+        keep = 0
+        if self._plan.preemption == "resume" and same_design:
+            keep = (n_done // self.snap_stride) * self.snap_stride
+
+        # the preempted instance: busy from its start to the boundary,
+        # credited with the kept prefix's compute/MACs; the rest of its
+        # busy interval is lost work (the fault_lost attribution bucket)
+        op = trace.opcode[:keep]
+        kept_macs = float(trace.macs[:keep].sum())
+        kept_compute = float(trace.tm[:keep].sum()) / f
+        busy = T - span.start * self._E
+        seg.result = TimingResult(
+            cycles=busy, n_mm=int((op == OP_MM).sum()),
+            n_tl=int((op == OP_TL).sum()), n_ts=int((op == OP_TS).sum()),
+            wl_skips=int(trace.reusable[:keep].sum()) if engine.wlbp else 0,
+            useful_macs=kept_macs,
+            peak_macs_per_cycle=engine.peak_macs_per_cycle,
+            bw_stall_cycles=0.0, schedules=None)
+        seg.preempted_at = T
+        seg.kept_instrs = keep
+        seg.kept_compute = kept_compute
+        seg.kept_macs = kept_macs
+        self.n_preempted += 1
+        self.fault_lost_cycles += busy - kept_compute
+
+        # the remainder: a fresh segment submitted at the fault boundary
+        new = Segment(self._next_sid, target, seg.specs, epoch)
+        self._next_sid += 1
+        new.origin_sid = seg.sid
+        new.resume_from = seg.resume_from + keep
+        if same_design:
+            if keep:
+                if self._ref:
+                    new.stream = seg.stream[keep:]
+                else:
+                    new.trace = slice_trace(seg.trace, keep)
+            else:
+                new.stream = seg.stream
+                new.trace = seg.trace
+        else:
+            policy = self.chip.core_specs[target].policy
+            if self._ref:
+                new.stream = tuple(_lower_many(seg.specs, policy))
+            else:
+                new.trace = compiled_trace(
+                    tuple(dataclasses.replace(s, name="")
+                          for s in seg.specs), policy)
+        new.demands = demands_bandwidth(self.chip, new.stream, new.trace)
+        if new.demands and self.chip.share_policy.needs_demand:
+            new.weight = self.chip.share_policy.weight(self._demand_of(new))
+        self._queues[target].append(new)
+        self._resume_of[seg.sid] = new
+        if target != seg.core:
+            self.n_migrated += 1
+
+        # freeze the preempted span at the boundary.  last_grant is pinned
+        # so the arbiter's convergence recompute (start + last_grant//E + 1)
+        # lands exactly back on the truncated end -- the span is a settled
+        # fact from here on and is never re-simulated.
+        if span.end is None or span.end > epoch:
+            span.end = epoch
+            span.last_grant = max(0.0, (epoch - span.start - 1) * self._E)
+            return seg.demands
+        return False
+
+    def _migrate_queued(self, seg: Segment) -> None:
+        """Move a queued (not yet started) segment off a downed core."""
+        target = self._pick_target()
+        if target is None or target == seg.core:
+            # every core down: leave it queued until a core_up
+            self._queues[seg.core].append(seg)
+            return
+        if (self.chip.core_specs[target]
+                != self.chip.core_specs[seg.core]):
+            # different design: the queued lowering is invalid there
+            policy = self.chip.core_specs[target].policy
+            if self._ref:
+                seg.stream = tuple(_lower_many(seg.specs, policy))
+                seg.trace = None
+            else:
+                seg.trace = compiled_trace(
+                    tuple(dataclasses.replace(s, name="")
+                          for s in seg.specs), policy)
+                seg.stream = None
+            seg.core = target
+            seg.demands = demands_bandwidth(self.chip, seg.stream,
+                                            seg.trace)
+            seg.weight = 1.0
+            if seg.demands and self.chip.share_policy.needs_demand:
+                seg.weight = self.chip.share_policy.weight(
+                    self._demand_of(seg))
+        else:
+            seg.core = target
+        self._queues[target].append(seg)
+        self.n_migrated += 1
 
     def _retire(self) -> None:
         """Prune segments that are facts out of the relaxation set.
@@ -426,7 +708,7 @@ class OnlineChip:
                 math.ceil(f / self._E))
             self.n_retired += 1
             s._snaps = []
-            if not self.telemetry.enabled:
+            if not self._keep_history:
                 # telemetry replays retired segments post-hoc, so the
                 # lowered stream / compiled trace must survive retirement
                 s.stream = s.trace = None
@@ -480,11 +762,28 @@ class OnlineChip:
         discarded and re-recorded).  ``seg.span._vis`` still holds the
         *previous* visible schedule here -- the arbiter updates it only
         after the simulation batch returns.
+
+        A slowed core (``slow_core`` fault) is simulated in its own
+        dilated time base: chip epoch ``E`` spans ``E * speed`` local
+        engine cycles, so the visible chip-cycle schedule maps to local
+        shares ``s / speed`` over local epochs ``E * speed``, and the
+        local results map back by ``1 / speed``.  Exact: the recurrence is
+        positively homogeneous in the time unit.
         """
+        if seg.preempted_at is not None:
+            # a preempted instance's truncated result is a settled fact
+            # (its span can never rejoin the relaxation)
+            return
         prefix, tail = vis
         engine = self.chip.core_specs[seg.core].engine
-        params = stream_model_params(self.chip, engine, prefix, self._E,
-                                     tail)
+        f = seg.speed
+        if f != 1.0:
+            params = stream_model_params(self.chip, engine,
+                                         tuple(s / f for s in prefix),
+                                         self._E * f, tail / f)
+        else:
+            params = stream_model_params(self.chip, engine, prefix,
+                                         self._E, tail)
         if self._ref:
             model = params.make_model()
             res = PipelineSimulator(engine,
@@ -497,7 +796,7 @@ class OnlineChip:
             if old_vis is not None and seg._snaps:
                 x = _first_change(old_vis, vis)
                 if x is not None:
-                    boundary = x * self._E
+                    boundary = x * self._E * f if f != 1.0 else x * self._E
                     for c in seg._snaps:
                         if c.horizon <= boundary:
                             carry = c
@@ -514,6 +813,134 @@ class OnlineChip:
                               if c.i <= carry.i] + snaps
                 self.stats["sims_resumed"] += 1
                 self.stats["instrs_resumed_past"] += carry.i
+        if f != 1.0:
+            res = dataclasses.replace(
+                res, cycles=res.cycles / f,
+                bw_stall_cycles=res.bw_stall_cycles / f)
+            last_grant = last_grant / f
         seg.result = res
         seg.span.last_grant = last_grant
         seg.span.throttled = res.bw_stall_cycles != 0.0
+
+    # ------------------------------------------------ checkpoint/resume
+    def snapshot(self) -> "OnlineSnapshot":
+        """Checkpoint the complete simulation state (see
+        :class:`OnlineSnapshot`).
+
+        The arbiter is settled first, so the captured state is a fixed
+        point: dirty flags need not be stored, and a restored chip resumes
+        with exactly the settled prefix, span ends, ``SimCarry`` snapshot
+        lists and fault bookkeeping of the original -- continuing a
+        restored run is bit-identical to never having checkpointed
+        (pinned by ``tests/test_faults.py``).  The snapshot owns deep
+        copies of all mutable state (further simulation on ``self`` cannot
+        corrupt it) and shares the immutable heavyweights (compiled
+        traces, lowered streams, results, carries).
+        """
+        self._pump(self.epoch)
+        self._settle()
+        state = dict(
+            epoch=self.epoch,
+            queues=[list(q) for q in self._queues],
+            active=list(self._active),
+            history=list(self.history),
+            retired_makespan=self._retired_makespan,
+            core_retired_epoch=list(self._core_retired_epoch),
+            core_retired_cycles=list(self._core_retired_cycles),
+            n_retired=self.n_retired,
+            next_sid=self._next_sid,
+            stats=dict(self.stats),
+            wsum=list(self._arb._wsum),
+            nact=list(self._arb._nact),
+            stamp=self._arb._stamp,
+            rounds_total=self._arb.rounds_total,
+            next_fault=self._next_fault,
+            resume_of=dict(self._resume_of),
+            down=list(self._down),
+            fault_log=list(self.fault_log),
+            n_preempted=self.n_preempted,
+            n_migrated=self.n_migrated,
+            fault_lost_cycles=self.fault_lost_cycles,
+        )
+        return OnlineSnapshot(self.chip, self.snap_stride, self._prune,
+                              self.telemetry, self._keep_history,
+                              _copy_state(state))
+
+    @classmethod
+    def restore(cls, snap: "OnlineSnapshot") -> "OnlineChip":
+        """Rebuild a chip from a checkpoint (the snapshot stays usable:
+        restoring twice yields two independent simulations)."""
+        sim = cls(snap.chip, snap.snap_stride, snap.prefix_cache,
+                  snap.telemetry, force_history=snap.force_history)
+        st = _copy_state(snap.state)
+        sim.epoch = st["epoch"]
+        sim._queues = [deque(q) for q in st["queues"]]
+        sim._active = st["active"]
+        sim.history = st["history"]
+        sim._retired_makespan = st["retired_makespan"]
+        sim._core_retired_epoch = st["core_retired_epoch"]
+        sim._core_retired_cycles = st["core_retired_cycles"]
+        sim.n_retired = st["n_retired"]
+        sim._next_sid = st["next_sid"]
+        sim.stats = st["stats"]
+        sim._arb._wsum = st["wsum"]
+        sim._arb._nact = st["nact"]
+        sim._arb._stamp = st["stamp"]
+        sim._arb.rounds_total = st["rounds_total"]
+        sim._next_fault = st["next_fault"]
+        sim._resume_of = st["resume_of"]
+        sim._down = st["down"]
+        sim.fault_log = st["fault_log"]
+        sim.n_preempted = st["n_preempted"]
+        sim.n_migrated = st["n_migrated"]
+        sim.fault_lost_cycles = st["fault_lost_cycles"]
+        return sim
+
+
+@dataclasses.dataclass(frozen=True)
+class OnlineSnapshot:
+    """A picklable checkpoint of an :class:`OnlineChip` mid-run.
+
+    Produced by :meth:`OnlineChip.snapshot`, consumed by
+    :meth:`OnlineChip.restore`.  ``state`` holds deep copies of the
+    mutable simulation state (segments, spans, queues, the arbiter's
+    settled prefix, fault bookkeeping) with immutable members shared;
+    everything inside is plain dataclasses / numpy arrays, so the whole
+    object round-trips through ``pickle`` for on-disk checkpoints of
+    long serving runs (``benchmarks/online_scaling.py --resume``).
+    """
+
+    chip: ChipConfig
+    snap_stride: int
+    prefix_cache: bool
+    telemetry: TelemetryConfig
+    force_history: bool
+    state: dict
+
+
+def _copy_state(state: dict) -> dict:
+    """Deep-copy a snapshot state dict in one pass (preserving the
+    aliasing between ``active``/``history``/queues and their spans) while
+    sharing the immutable heavyweights: compiled traces, lowered streams,
+    specs, results and ``SimCarry`` checkpoints are seeded into the memo
+    so ``deepcopy`` reuses them instead of duplicating megabytes of
+    arrays."""
+    memo: dict = {}
+
+    def pin(obj) -> None:
+        if obj is not None:
+            memo[id(obj)] = obj
+
+    segs: set[Segment] = set(state["active"])
+    segs.update(state["history"])
+    segs.update(state["resume_of"].values())
+    for q in state["queues"]:
+        segs.update(q)
+    for seg in segs:
+        pin(seg.specs)
+        pin(seg.stream)
+        pin(seg.trace)
+        pin(seg.result)
+        for c in seg._snaps:
+            pin(c)
+    return copy.deepcopy(state, memo)

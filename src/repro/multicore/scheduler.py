@@ -390,10 +390,13 @@ def scheduled_chip_report(specs: list[GemmSpec], chip: ChipConfig,
     if not specs:
         raise ValueError("empty workload")
     shards = assign(specs, chip, scheduler, partition)
+    name = f"{specs[0].name}+{len(specs) - 1}" if len(specs) > 1 else specs[0].name
+    if chip.fault_plan is not None and chip.fault_plan.needs_online:
+        from .faults import faulted_chip_report
+        return faulted_chip_report(shards, chip, name, scheduler, telemetry)
     streams, traces = _streams_traces(chip, shards)
     cluster = CoreCluster(chip)
     results, stalls, trace = cluster.run_streams(streams, traces)
-    name = f"{specs[0].name}+{len(specs) - 1}" if len(specs) > 1 else specs[0].name
     report = _aggregate(chip, name, scheduler, shards, results, stalls,
                         _single_core_cycles(chip, specs), trace,
                         cluster.core_weights, streams=streams, traces=traces)
@@ -414,6 +417,10 @@ def scheduled_workload_report(workload, chip: ChipConfig,
     if not units:
         raise ValueError("empty workload")
     shards = assign_units(units, chip, scheduler, partition)
+    if chip.fault_plan is not None and chip.fault_plan.needs_online:
+        from .faults import faulted_chip_report
+        return faulted_chip_report(shards, chip, workload.name, scheduler,
+                                   telemetry, phase=workload.phase)
     streams, traces = _streams_traces(chip, shards)
     cluster = CoreCluster(chip)
     results, stalls, trace = cluster.run_streams(streams, traces)

@@ -1,7 +1,7 @@
 """Stall-cycle attribution: where did every core-cycle go?
 
 Each core's share of the run window (``window`` cycles per core) is
-decomposed into five disjoint buckets:
+decomposed into six disjoint buckets:
 
 ``compute``
     Cycles the systolic array was streaming useful feed rows: the sum of
@@ -17,6 +17,11 @@ decomposed into five disjoint buckets:
     makespan minus its unthrottled makespan (not the arbiter's raw grant
     delay, which the pipeline may absorb; see
     ``TimingResult.bw_stall_cycles``).
+``fault_lost``
+    Fault runs only: busy cycles whose progress a preemption discarded --
+    the preempted instance's busy interval minus its kept prefix's
+    compute credit (see :mod:`repro.multicore.faults`).  Zero on every
+    fault-free run.
 ``queue_wait``
     Online runs only: cycles the core sat idle while work addressed to it
     was waiting in its queue (submitted but not yet started).
@@ -26,8 +31,9 @@ decomposed into five disjoint buckets:
 Conservation is exact by construction (``idle`` is the residual) and
 non-negativity of ``fill_drain`` is guaranteed: a segment's busy cycles
 minus its bandwidth stall equals its unthrottled makespan, which is at
-least its total FF feed time.  ``tests/test_obs.py`` asserts both on all
-backends.
+least its total FF feed time (a preempted instance charges everything
+past its compute credit to ``fault_lost`` instead).  ``tests/test_obs.py``
+asserts both on all backends.
 """
 
 from __future__ import annotations
@@ -49,10 +55,14 @@ class CoreAttribution:
     bw_stall: float
     queue_wait: float
     idle: float
+    #: busy cycles discarded by fault preemption (0 on fault-free runs;
+    #: defaulted last so fault-free construction sites stay unchanged)
+    fault_lost: float = 0.0
 
     @property
     def busy(self) -> float:
-        return self.compute + self.fill_drain + self.bw_stall
+        return (self.compute + self.fill_drain + self.bw_stall
+                + self.fault_lost)
 
     @property
     def total(self) -> float:
@@ -60,7 +70,8 @@ class CoreAttribution:
 
 
 #: bucket names in table/export order
-BUCKETS = ("compute", "fill_drain", "bw_stall", "queue_wait", "idle")
+BUCKETS = ("compute", "fill_drain", "bw_stall", "fault_lost",
+           "queue_wait", "idle")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,17 +96,25 @@ class StallAttribution:
         return {b: self.total(b) / occ for b in BUCKETS}
 
     def table(self) -> str:
-        """Plain-text summary table (one row per core + a chip total)."""
-        head = (f"{'core':>6} {'compute':>12} {'fill/drain':>12} "
-                f"{'bw-stall':>12} {'queue-wait':>12} {'idle':>12}")
+        """Plain-text summary table (one row per core + a chip total).
+
+        The ``fault_lost`` column appears only when some core has a
+        nonzero entry, keeping fault-free output byte-identical to the
+        five-bucket format."""
+        buckets = list(BUCKETS)
+        if not any(c.fault_lost for c in self.cores):
+            buckets.remove("fault_lost")
+        labels = {"fill_drain": "fill/drain", "bw_stall": "bw-stall",
+                  "queue_wait": "queue-wait", "fault_lost": "fault-lost"}
+        head = f"{'core':>6} " + " ".join(
+            f"{labels.get(b, b):>12}" for b in buckets)
         lines = [head, "-" * len(head)]
         for c in self.cores:
-            lines.append(f"{c.core:>6} {c.compute:>12.0f} "
-                         f"{c.fill_drain:>12.0f} {c.bw_stall:>12.0f} "
-                         f"{c.queue_wait:>12.0f} {c.idle:>12.0f}")
+            lines.append(f"{c.core:>6} " + " ".join(
+                f"{getattr(c, b):>12.0f}" for b in buckets))
         fr = self.fractions()
         lines.append(f"{'chip':>6} " + " ".join(
-            f"{100 * fr[b]:>11.1f}%" for b in BUCKETS))
+            f"{100 * fr[b]:>11.1f}%" for b in buckets))
         return "\n".join(lines)
 
 
@@ -141,19 +160,19 @@ def _measure_minus(wait: list[tuple[float, float]],
 
 def attribute_segments(
         n_cores: int, window: float,
-        segments: Sequence[tuple[int, float, float, float, float, float]],
+        segments: Sequence[tuple],
 ) -> StallAttribution:
     """Fold per-segment facts into per-core buckets.
 
     ``segments`` rows are ``(core, submit, start, finish, compute,
-    bw_stall)`` -- times on the shared chip clock, ``compute``/``bw_stall``
-    in cycles.  ``queue_wait`` is the measure of the union of each core's
+    bw_stall)`` with an optional seventh ``fault_lost`` element -- times
+    on the shared chip clock, ``compute``/``bw_stall``/``fault_lost`` in
+    cycles.  ``queue_wait`` is the measure of the union of each core's
     ``[submit, start)`` intervals minus its busy intervals, so overlapping
     waiters are not double counted and waiting behind a running segment
     counts as that segment's busy time, not queue-wait.
     """
-    per: list[list[tuple[int, float, float, float, float, float]]] = \
-        [[] for _ in range(n_cores)]
+    per: list[list[tuple]] = [[] for _ in range(n_cores)]
     for row in segments:
         per[row[0]].append(row)
     cores = []
@@ -162,13 +181,14 @@ def attribute_segments(
         busy = sum(r[3] - r[2] for r in rows)
         compute = sum(r[4] for r in rows)
         bw = sum(r[5] for r in rows)
-        fill_drain = busy - compute - bw
+        lost = sum(r[6] for r in rows if len(r) > 6)
+        fill_drain = busy - compute - bw - lost
         busy_iv = [(r[2], r[3]) for r in rows]
         wait_iv = [(r[1], min(r[2], window)) for r in rows]
         queue_wait = _measure_minus(wait_iv, busy_iv)
         idle = window - busy - queue_wait
         cores.append(CoreAttribution(core, compute, fill_drain, bw,
-                                     queue_wait, idle))
+                                     queue_wait, idle, fault_lost=lost))
     return StallAttribution(window=window, cores=tuple(cores))
 
 

@@ -51,15 +51,20 @@ def to_trace_events(tele: ChipTelemetry) -> dict:
 
     # -- run + queue slices, async request lifetimes ----------------------
     for s in tele.segments:
+        args = {"sid": s.sid, "compute_cycles": s.compute_cycles,
+                "bw_stall_cycles": s.bw_stall_cycles,
+                "arb_delay_cycles": s.arb_delay_cycles,
+                "queue_cycles": s.queue_cycles,
+                "n_mm": s.n_mm, "n_tl": s.n_tl, "n_ts": s.n_ts,
+                "wl_skips": s.wl_skips}
+        if s.fault_lost_cycles:
+            # keyed in only on preempted instances: fault-free exports
+            # stay byte-identical to the pre-fault schema
+            args["fault_lost_cycles"] = s.fault_lost_cycles
         ev.append({
             "ph": "X", "name": s.name, "cat": "segment", "pid": pid,
             "tid": s.core, "ts": s.start_time, "dur": s.busy_cycles,
-            "args": {"sid": s.sid, "compute_cycles": s.compute_cycles,
-                     "bw_stall_cycles": s.bw_stall_cycles,
-                     "arb_delay_cycles": s.arb_delay_cycles,
-                     "queue_cycles": s.queue_cycles,
-                     "n_mm": s.n_mm, "n_tl": s.n_tl, "n_ts": s.n_ts,
-                     "wl_skips": s.wl_skips}})
+            "args": args})
         if s.start_time > s.submit_time:
             ev.append({
                 "ph": "X", "name": f"queued {s.name}", "cat": "queue",
@@ -171,6 +176,9 @@ def to_trace_events(tele: ChipTelemetry) -> dict:
                           "queue_wait", "idle")},
         },
     }
+    fault_lost = tele.attribution.total("fault_lost")
+    if fault_lost:
+        out["otherData"]["attribution"]["fault_lost"] = fault_lost
     if dropped:
         out["otherData"]["stage_events_dropped"] = dropped
     return out

@@ -55,6 +55,9 @@ class SegmentTimeline:
     wl_skips: int
     #: per-instruction events (only with ``TelemetryConfig.stages``)
     events: StreamEvents | None = None
+    #: busy cycles discarded by fault preemption -- nonzero only on the
+    #: preempted instance of a segment cut by a ``core_down`` event
+    fault_lost_cycles: float = 0.0
 
     @property
     def queue_cycles(self) -> float:
@@ -105,7 +108,8 @@ def _check_replay(events: StreamEvents, cycles: float, what: str) -> None:
 
 def _attribution_rows(segments: Sequence[SegmentTimeline]):
     return [(s.core, s.submit_time, s.start_time, s.finish_time,
-             s.compute_cycles, s.bw_stall_cycles) for s in segments]
+             s.compute_cycles, s.bw_stall_cycles, s.fault_lost_cycles)
+            for s in segments]
 
 
 def build_chip_telemetry(cluster, shards, report,
@@ -180,9 +184,27 @@ def build_online_telemetry(online, tcfg: TelemetryConfig = OFF,
         if seg.result is None or seg.span is None:
             continue            # never started (undrained run)
         engine = chip.core_specs[seg.core].engine
-        trace = _trace_of(seg.trace, seg.stream)
-        compute = _compute_cycles(trace)
         busy = seg.result.cycles
+        start = seg.span.start * E
+        name = names.get(seg.sid, "+".join(s.name for s in seg.specs
+                                           if s.name) or f"seg{seg.sid}")
+        if seg.preempted_at is not None:
+            # a preempted instance: busy to the fault boundary, credited
+            # with its kept prefix; the rest of the interval is lost work.
+            # No unthrottled counterfactual or stage replay exists for the
+            # cut -- its remainder is a later instance of its own.
+            segments.append(SegmentTimeline(
+                sid=seg.sid, name=f"{name} (preempted)", core=seg.core,
+                submit_time=seg.submit_epoch * E, start_time=start,
+                finish_time=start + busy, busy_cycles=busy,
+                compute_cycles=seg.kept_compute, bw_stall_cycles=0.0,
+                arb_delay_cycles=0.0, n_mm=seg.result.n_mm,
+                n_tl=seg.result.n_tl, n_ts=seg.result.n_ts,
+                wl_skips=seg.result.wl_skips, events=None,
+                fault_lost_cycles=max(0.0, busy - seg.kept_compute)))
+            continue
+        trace = _trace_of(seg.trace, seg.stream)
+        compute = _compute_cycles(trace) / seg.speed
         arb_delay = seg.result.bw_stall_cycles
         bw_stall = 0.0
         if arb_delay != 0.0:
@@ -195,11 +217,12 @@ def build_online_telemetry(online, tcfg: TelemetryConfig = OFF,
                 unthrottled_cycles[key] = base
             # clamp: cross-backend rounding must not push fill/drain
             # negative (reference results vs. the numpy baseline)
-            bw_stall = min(max(0.0, busy - base),
+            bw_stall = min(max(0.0, busy - base / seg.speed),
                            max(0.0, busy - compute))
-        start = seg.span.start * E
         events = None
-        if tcfg.stages:
+        if tcfg.stages and seg.speed == 1.0:
+            # slowed cores run in a dilated local time base the replay
+            # does not model; their timelines carry no stage events
             vis = seg.span._vis
             prefix, tail = vis if vis is not None else ((), math.inf)
             events = replay_events(
@@ -207,9 +230,7 @@ def build_online_telemetry(online, tcfg: TelemetryConfig = OFF,
                 stream_model_params(chip, engine, prefix, E, tail))
             _check_replay(events, busy, f"segment {seg.sid}")
         segments.append(SegmentTimeline(
-            sid=seg.sid,
-            name=names.get(seg.sid, "+".join(s.name for s in seg.specs
-                                             if s.name) or f"seg{seg.sid}"),
+            sid=seg.sid, name=name,
             core=seg.core, submit_time=seg.submit_epoch * E,
             start_time=start, finish_time=start + busy,
             busy_cycles=busy, compute_cycles=compute,
@@ -219,12 +240,13 @@ def build_online_telemetry(online, tcfg: TelemetryConfig = OFF,
             events=events))
     segs = tuple(sorted(segments, key=lambda s: (s.core, s.start_time)))
     window = max((s.finish_time for s in segs), default=0.0)
+    fault_marks = tuple((ep * E, label) for ep, label in online.fault_log)
     return ChipTelemetry(
         kind="online", design=chip.design_name, n_cores=chip.n_cores,
         epoch_cycles=E, window=window, segments=segs,
         share_trace=online.share_trace, active_trace=online.active_trace,
         core_weights=(1.0,) * chip.n_cores,
-        marks=tuple(sorted(marks)),
+        marks=tuple(sorted(tuple(marks) + fault_marks)),
         attribution=attribute_segments(chip.n_cores, window,
                                        _attribution_rows(segs)),
         config=tcfg)

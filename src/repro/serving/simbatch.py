@@ -40,6 +40,32 @@ epoch bandwidth arbiter.  Policies (:data:`POLICIES`):
     exact boundary the core frees up, instead of waiting for the next
     decision epoch.  Never admits more than one request per predicted-free
     core, and subject to the same bandwidth headroom check.
+``phase_aware``
+    ``occupancy`` plus a cap of ``max_prefills`` concurrently *running*
+    prefill-heavy requests (prefill >= half the request's MACs): decode
+    work is latency-bound and cheap per epoch, prefill is a bandwidth
+    storm -- letting every idle core start a prefill at once starves the
+    decodes behind them.  Decode-heavy requests are admitted past waiting
+    prefills (no head-of-line blocking across phases).
+``degraded``
+    Graceful degradation: ``occupancy`` while the chip is healthy; when
+    measured headroom collapses (zero bandwidth headroom for another
+    request, or a core is down under a fault plan) it sheds load by
+    admitting only decode-heavy requests -- prefill-heavy work waits (and
+    may time out and retry) instead of piling onto a saturated or
+    shrunken chip and collapsing the queue for everyone.
+
+Deadlines, retry and abandonment: a :class:`ServeRequest` may carry a
+``deadline`` (cycles, per attempt, measured from the attempt's arrival).
+A request still *waiting* when its deadline lapses is retried with
+exponential backoff (re-arrival after ``backoff_epochs * 2**(attempt-1)``
+epochs), up to ``max_attempts`` attempts, then **abandoned** (infinite
+latency, excluded from the makespan).  An *admitted* request always runs
+to completion; finishing past its deadline counts as a deadline miss.
+:class:`BatchReport` reports ``deadline_miss_rate``, ``retries``,
+``abandoned`` and ``goodput_macs_per_cycle`` (MACs of requests served
+within their deadline, per makespan cycle) -- the metric the
+fault-tolerance benchmark ranks policies by.
 
 Work conservation: whenever the chip is completely idle and a
 threshold policy (``bandwidth``/``occupancy``) declines every waiting
@@ -58,6 +84,7 @@ suite pins it.
 from __future__ import annotations
 
 import dataclasses
+import math
 import random
 from collections import deque
 from typing import Sequence
@@ -71,7 +98,8 @@ from ..multicore.online import OnlineChip
 from ..multicore.scheduler import assign_incremental
 from ..obs.config import OFF, TelemetryConfig
 
-POLICIES = ("fixed", "bandwidth", "occupancy", "predicted")
+POLICIES = ("fixed", "bandwidth", "occupancy", "predicted", "phase_aware",
+            "degraded")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,6 +119,10 @@ class ServeRequest:
     arrival_epoch: int
     prefill: GemmSpec | tuple[GemmSpec, ...]
     decode: tuple[GemmSpec, ...] = ()
+    #: per-attempt service deadline in cycles, measured from the attempt's
+    #: (re-)arrival; ``None`` -- the default -- means best-effort (never
+    #: retried, never abandoned, never counted as a miss)
+    deadline: float | None = None
 
     @property
     def specs(self) -> tuple[GemmSpec, ...]:
@@ -101,6 +133,18 @@ class ServeRequest:
     @property
     def macs(self) -> int:
         return sum(s.macs for s in self.specs)
+
+    @property
+    def prefill_macs(self) -> int:
+        pf = (self.prefill,) if isinstance(self.prefill, GemmSpec) \
+            else tuple(self.prefill)
+        return sum(s.macs for s in pf)
+
+    @property
+    def prefill_heavy(self) -> bool:
+        """Prefill is at least half this request's MACs -- the phase the
+        ``phase_aware`` cap and ``degraded`` shedding gate on."""
+        return 2 * self.prefill_macs >= self.macs
 
 
 def synthetic_trace(n_requests: int = 16, *, seed: int = 0,
@@ -214,6 +258,19 @@ class BatchReport:
     arrival_epochs: tuple[int, ...]
     admit_epochs: tuple[int, ...]       # when each request entered the chip
     macs: int
+    #: (late-served + abandoned) / n_requests; 0.0 when no request carries
+    #: a deadline
+    deadline_miss_rate: float = 0.0
+    #: waiting-timeout retries across all requests (each re-arrival after
+    #: exponential backoff counts once)
+    retries: int = 0
+    #: requests that exhausted ``max_attempts`` without being admitted --
+    #: their latency/finish is ``inf`` and they are excluded from the
+    #: makespan
+    abandoned: int = 0
+    #: MACs of requests served within their deadline (all served MACs when
+    #: no deadlines are set; abandoned requests never count)
+    served_macs: int = 0
     #: :class:`repro.obs.timeline.ChipTelemetry` when the run was made with
     #: ``telemetry=TelemetryConfig(enabled=True)``; excluded from equality
     #: (reports with and without telemetry compare by the numbers above)
@@ -247,6 +304,26 @@ class BatchReport:
     def throughput_macs_per_cycle(self) -> float:
         return self.macs / self.makespan if self.makespan else 0.0
 
+    @property
+    def goodput_macs_per_cycle(self) -> float:
+        """Within-deadline MACs per makespan cycle -- equals throughput on
+        a deadline-free run, and the metric the fault-tolerance benchmark
+        ranks admission policies by."""
+        return self.served_macs / self.makespan if self.makespan else 0.0
+
+
+class _Pending:
+    """A logical request waiting for admission: its current attempt's
+    (re-)arrival epoch and how many attempts it has made so far."""
+
+    __slots__ = ("req", "arrival", "attempts")
+
+    def __init__(self, req: ServeRequest, arrival: int,
+                 attempts: int = 1):
+        self.req = req
+        self.arrival = arrival
+        self.attempts = attempts
+
 
 class _Batcher:
     """One admission-policy run over an arrival trace (driver state)."""
@@ -255,7 +332,9 @@ class _Batcher:
                  policy: str, batch_size: int, min_share: float,
                  snap_stride: int, lookahead: int = 1,
                  prefix_cache: bool = True,
-                 telemetry: TelemetryConfig = OFF):
+                 telemetry: TelemetryConfig = OFF,
+                 max_attempts: int = 3, backoff_epochs: int = 1,
+                 max_prefills: int = 1):
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; "
                              f"available: {POLICIES}")
@@ -263,22 +342,46 @@ class _Batcher:
             raise ValueError("batch_size must be >= 1")
         if lookahead < 0:
             raise ValueError("lookahead must be >= 0")
+        if max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1")
+        if backoff_epochs < 0:
+            raise ValueError("backoff_epochs must be >= 0")
+        if max_prefills < 1:
+            raise ValueError("max_prefills must be >= 1")
         self.chip = chip
         self.policy = policy
         self.batch_size = batch_size
         self.min_share = min_share
         self.lookahead = lookahead
         self.telemetry = telemetry
+        self.max_attempts = max_attempts
+        self.backoff_epochs = backoff_epochs
+        self.max_prefills = max_prefills
         self.submitted = list(requests)     # caller order, for the report
         self.requests = sorted(requests, key=lambda r: r.arrival_epoch)
         self.sim = OnlineChip(chip, snap_stride=snap_stride,
                               prefix_cache=prefix_cache,
                               telemetry=telemetry)
-        self.waiting: deque[ServeRequest] = deque()
+        self.waiting: deque[_Pending] = deque()
         self.next_arrival = 0               # index into self.requests
         self.segments: dict[str, object] = {}
         self.admit_epochs: dict[str, int] = {}
         self._rr = 0                        # fixed policy's blind pointer
+        # -- deadline / retry state (all inert without deadlines) --
+        self._deadlines = any(r.deadline is not None for r in requests)
+        #: backoff re-arrivals not yet due, as (epoch, seq, record) --
+        #: ``seq`` makes equal-epoch ordering deterministic
+        self.retry: list[tuple[int, int, _Pending]] = []
+        self._rseq = 0
+        self.abandoned_names: set[str] = set()
+        self.n_retries = 0
+        #: (epoch, label) retry/abandon instants for the telemetry marks
+        self.events: list[tuple[int, str]] = []
+        #: arrival epoch of the attempt that was finally admitted (the
+        #: point deadline misses of served requests are measured from)
+        self.attempt_arrival: dict[str, int] = {}
+        #: admitted prefill-heavy segments (phase_aware cap accounting)
+        self._pf_segs: list = []
 
     # -- admission ---------------------------------------------------------
     def _headroom(self) -> int:
@@ -295,8 +398,33 @@ class _Batcher:
             k += 1
         return k
 
-    def _admit(self) -> list[tuple[ServeRequest, int]]:
-        """The policy's admissions for the current epoch: (request, core)."""
+    def _active_prefills(self) -> int:
+        """Admitted prefill-heavy requests still running right now
+        (following preemption-resume chains; queued resumes count as
+        running)."""
+        now = self.sim.epoch * self.chip.epoch_cycles
+        alive = []
+        for seg in self._pf_segs:
+            seg = self.sim.final_instance(seg)
+            if (seg.span is None or seg.result is None
+                    or self.sim.finish_time(seg) > now):
+                alive.append(seg)
+        self._pf_segs = alive
+        return len(alive)
+
+    def _take_waiting(self, picks: Sequence[int],
+                      free_cores: Sequence[int]
+                      ) -> list[tuple[_Pending, int]]:
+        """Remove the picked waiting records (by index) and place them on
+        the free cores in order."""
+        out = [(self.waiting[i], free_cores[j])
+               for j, i in enumerate(picks)]
+        for i in reversed(picks):
+            del self.waiting[i]
+        return out
+
+    def _admit(self) -> list[tuple[_Pending, int]]:
+        """The policy's admissions for the current epoch: (record, core)."""
         sim, waiting = self.sim, self.waiting
         n_cores = self.chip.n_cores
         if self.policy == "fixed":
@@ -314,6 +442,35 @@ class _Batcher:
                           if not busy]
             take = min(take, len(free_cores))
             return [(waiting.popleft(), free_cores[i]) for i in range(take)]
+        if self.policy == "phase_aware":
+            free_cores = [c for c, busy in enumerate(sim.core_busy())
+                          if not busy]
+            limit = min(take, len(free_cores))
+            pf_slots = self.max_prefills - self._active_prefills()
+            picks: list[int] = []
+            for i, rec in enumerate(waiting):
+                if len(picks) >= limit:
+                    break
+                if rec.req.prefill_heavy:
+                    if pf_slots <= 0:
+                        continue    # decode work may pass the waiting prefill
+                    pf_slots -= 1
+                picks.append(i)
+            return self._take_waiting(picks, free_cores)
+        if self.policy == "degraded":
+            free_cores = [c for c, busy in enumerate(sim.core_busy())
+                          if not busy]
+            shed = any(sim.down_cores) or self._headroom() == 0
+            if not shed:
+                take = min(take, len(free_cores))
+                return [(waiting.popleft(), free_cores[i])
+                        for i in range(take)]
+            # headroom collapsed (or the chip shrank): decode-heavy only,
+            # one per idle core, past the bandwidth floor -- decode traffic
+            # is light and keeping it flowing is what preserves goodput
+            picks = [i for i, rec in enumerate(waiting)
+                     if not rec.req.prefill_heavy][:len(free_cores)]
+            return self._take_waiting(picks, free_cores)
         if self.policy == "predicted":
             # forecast from the settled schedule: a core whose settled
             # work + queued backlog drains within the lookahead window is
@@ -328,16 +485,16 @@ class _Batcher:
             take = min(take, len(soon))
             return [(waiting.popleft(), soon[i]) for i in range(take)]
         # bandwidth: headroom-gated, placed on the soonest-free core
-        reqs = [waiting.popleft() for _ in range(take)]
-        return self._soonest_free(reqs)
+        recs = [waiting.popleft() for _ in range(take)]
+        return self._soonest_free(recs)
 
-    def _soonest_free(self, reqs: Sequence[ServeRequest]
-                      ) -> list[tuple[ServeRequest, int]]:
+    def _soonest_free(self, recs: Sequence[_Pending]
+                      ) -> list[tuple[_Pending, int]]:
         # one freshly-built list per request: items are distinct objects by
         # construction, so identity maps them back to their request even
         # when two requests have equal GEMM shapes
-        items = [list(r.specs) for r in reqs]
-        by_item = {id(item): r for item, r in zip(items, reqs)}
+        items = [list(rec.req.specs) for rec in recs]
+        by_item = {id(item): rec for item, rec in zip(items, recs)}
         placement = assign_incremental(items, self.chip,
                                        self.sim.free_at_estimate())
         out = []
@@ -346,18 +503,68 @@ class _Batcher:
                 out.append((by_item[id(item)], core))
         return out
 
+    # -- deadlines: waiting-expiry, backoff, abandonment -------------------
+    def _expire(self, t: int) -> None:
+        """Time out waiting attempts whose deadline lapsed: re-enqueue
+        with exponential backoff, or abandon past ``max_attempts``."""
+        E = self.chip.epoch_cycles
+        kept: deque[_Pending] = deque()
+        for rec in self.waiting:
+            dl = rec.req.deadline
+            if dl is None or (t - rec.arrival) * E <= dl:
+                kept.append(rec)
+            elif rec.attempts >= self.max_attempts:
+                self.abandoned_names.add(rec.req.name)
+                self.events.append((t, f"abandon {rec.req.name}"))
+            else:
+                delay = self.backoff_epochs * (2 ** (rec.attempts - 1))
+                rec.attempts += 1
+                rec.arrival = t + delay
+                self.n_retries += 1
+                self._rseq += 1
+                self.retry.append((rec.arrival, self._rseq, rec))
+                self.events.append((t, f"retry {rec.req.name}"))
+        self.waiting = kept
+
+    def _next_expiry(self) -> int | None:
+        """First epoch at which some waiting attempt's deadline lapses
+        (a decision-epoch candidate: expiry changes batcher state even
+        when the chip does nothing)."""
+        if not self._deadlines:
+            return None
+        E = self.chip.epoch_cycles
+        out = None
+        for rec in self.waiting:
+            dl = rec.req.deadline
+            if dl is None:
+                continue
+            e = math.floor((rec.arrival * E + dl) / E) + 1
+            out = e if out is None else min(out, e)
+        return out
+
     # -- driver ------------------------------------------------------------
     def run(self) -> BatchReport:
         sim = self.sim
+        E = self.chip.epoch_cycles
         if self.requests:
             t = self.requests[0].arrival_epoch
-            while self.next_arrival < len(self.requests) or self.waiting:
+            while (self.next_arrival < len(self.requests) or self.waiting
+                   or self.retry):
                 sim.advance_to(t)
                 while (self.next_arrival < len(self.requests)
                        and self.requests[self.next_arrival].arrival_epoch
                        <= t):
-                    self.waiting.append(self.requests[self.next_arrival])
+                    r = self.requests[self.next_arrival]
+                    self.waiting.append(_Pending(r, r.arrival_epoch))
                     self.next_arrival += 1
+                if self.retry:
+                    due = sorted(x for x in self.retry if x[0] <= t)
+                    if due:
+                        self.retry = [x for x in self.retry if x[0] > t]
+                        for _, _, rec in due:
+                            self.waiting.append(rec)
+                if self._deadlines:
+                    self._expire(t)
                 admitted = self._admit()
                 if (not admitted and self.waiting
                         and self.policy != "fixed"
@@ -367,38 +574,69 @@ class _Batcher:
                     # fixed policy is exempt -- waiting for a full group
                     # is its defining (and deadlock-free) behavior.
                     admitted = self._soonest_free([self.waiting.popleft()])
-                segs = sim.submit_batch([(core, req.specs)
-                                         for req, core in admitted])
-                for (req, _), seg in zip(admitted, segs):
-                    self.segments[req.name] = seg
-                    self.admit_epochs[req.name] = t
+                segs = sim.submit_batch([(core, rec.req.specs)
+                                         for rec, core in admitted])
+                for (rec, _), seg in zip(admitted, segs):
+                    self.segments[rec.req.name] = seg
+                    self.admit_epochs[rec.req.name] = t
+                    self.attempt_arrival[rec.req.name] = rec.arrival
+                    if (self.policy == "phase_aware"
+                            and rec.req.prefill_heavy):
+                        self._pf_segs.append(seg)
                 cands = []
                 if self.next_arrival < len(self.requests):
                     cands.append(
                         self.requests[self.next_arrival].arrival_epoch)
+                if self.retry:
+                    cands.append(min(x[0] for x in self.retry))
                 if self.waiting:
                     nxt = sim.next_event()
                     if nxt is not None:
                         cands.append(nxt)
+                    exp = self._next_expiry()
+                    if exp is not None:
+                        cands.append(exp)
                 if not cands:
                     break
                 t = min(cands)
             sim.drain()
-        E = self.chip.epoch_cycles
         reqs = self.submitted
-        finishes = [sim.finish_time(self.segments[r.name]) for r in reqs]
-        latencies = [f - r.arrival_epoch * E
-                     for f, r in zip(finishes, reqs)]
+        finishes: list[float] = []
+        latencies: list[float] = []
+        missed = 0
+        served_macs = 0
+        for r in reqs:
+            seg = self.segments.get(r.name)
+            if seg is None:
+                # abandoned without ever being admitted
+                finishes.append(math.inf)
+                latencies.append(math.inf)
+                missed += 1
+                continue
+            f = sim.finish_time(sim.final_instance(seg))
+            finishes.append(f)
+            latencies.append(f - r.arrival_epoch * E)
+            if (r.deadline is not None
+                    and f - self.attempt_arrival[r.name] * E > r.deadline):
+                missed += 1     # admitted, but retired past the deadline
+            else:
+                served_macs += r.macs
         first = min((r.arrival_epoch for r in reqs), default=0) * E
+        finite = [f for f in finishes if not math.isinf(f)]
         tele = None
         if self.telemetry.enabled:
             from ..obs.timeline import build_online_telemetry
-            names = {seg.sid: name                       # type: ignore[attr-defined]
-                     for name, seg in self.segments.items()}
+            names = {}
+            for name, seg in self.segments.items():
+                names[seg.sid] = name                # type: ignore[attr-defined]
+                while seg.preempted_at is not None:  # type: ignore[attr-defined]
+                    seg = sim.resume_of(seg)
+                    names[seg.sid] = name
             marks = [(r.arrival_epoch * E, f"arrive {r.name}")
                      for r in reqs]
             marks += [(self.admit_epochs[r.name] * E, f"admit {r.name}")
-                      for r in reqs]
+                      for r in reqs if r.name in self.admit_epochs]
+            marks += [(e * E, label) for e, label in self.events]
             tele = build_online_telemetry(sim, self.telemetry, names=names,
                                           marks=marks)
         return BatchReport(
@@ -407,13 +645,18 @@ class _Batcher:
             n_cores=self.chip.n_cores,
             n_requests=len(reqs),
             epoch_cycles=E,
-            makespan=max(finishes, default=first) - first,
+            makespan=max(finite, default=first) - first,
             names=tuple(r.name for r in reqs),
             latencies=tuple(latencies),
             finish_times=tuple(finishes),
             arrival_epochs=tuple(r.arrival_epoch for r in reqs),
-            admit_epochs=tuple(self.admit_epochs[r.name] for r in reqs),
+            admit_epochs=tuple(self.admit_epochs.get(r.name, -1)
+                               for r in reqs),
             macs=sum(r.macs for r in reqs),
+            deadline_miss_rate=missed / len(reqs) if reqs else 0.0,
+            retries=self.n_retries,
+            abandoned=len(self.abandoned_names),
+            served_macs=served_macs,
             telemetry=tele,
         )
 
@@ -426,6 +669,9 @@ def run_batcher(requests: Sequence[ServeRequest],
                 lookahead: int = 1,
                 prefix_cache: bool = True,
                 telemetry: TelemetryConfig = OFF,
+                max_attempts: int = 3,
+                backoff_epochs: int = 1,
+                max_prefills: int = 1,
                 **chip_kwargs) -> BatchReport:
     """Serve an arrival trace through the online chip model.
 
@@ -438,8 +684,11 @@ def run_batcher(requests: Sequence[ServeRequest],
     results, linearly more work -- the ``benchmarks/online_scaling.py``
     comparison).  ``telemetry=TelemetryConfig(enabled=True)`` attaches a
     full :class:`repro.obs.timeline.ChipTelemetry` to the report (see
-    ``docs/observability.md``).  Extra keyword arguments construct the
-    :class:`ChipConfig` when none is given (cf.
+    ``docs/observability.md``).  ``max_attempts``/``backoff_epochs`` bound
+    the deadline retry loop and ``max_prefills`` is the ``phase_aware``
+    concurrent-prefill cap (all three inert without deadlines or that
+    policy; see ``docs/resilience.md``).  Extra keyword arguments
+    construct the :class:`ChipConfig` when none is given (cf.
     :func:`repro.multicore.simulate_chip`).
     """
     if chip is None:
@@ -453,4 +702,5 @@ def run_batcher(requests: Sequence[ServeRequest],
     if len(set(names)) != len(names):
         raise ValueError("request names must be unique")
     return _Batcher(requests, chip, policy, batch_size, min_share,
-                    snap_stride, lookahead, prefix_cache, telemetry).run()
+                    snap_stride, lookahead, prefix_cache, telemetry,
+                    max_attempts, backoff_epochs, max_prefills).run()
