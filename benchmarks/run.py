@@ -80,6 +80,37 @@ def _check_fault_tolerance(path) -> list[str]:
     return problems
 
 
+def _check_online_scaling(path) -> list[str]:
+    """Payload validation for BENCH_online_scaling.json: both comparison
+    blocks present, their report identities asserted, and any full-scale
+    speedup floor the run claims to have asserted actually met."""
+    problems: list[str] = []
+    data = json.loads(path.read_text()).get("data", {})
+    jit = data.get("jit")
+    if not isinstance(jit, dict):
+        problems.append(f"{path.name}: missing jit comparison block")
+    else:
+        for k in ("seconds_numpy", "seconds_jit_cold", "seconds_jit_warm",
+                  "speedup", "speedup_warm"):
+            if not isinstance(jit.get(k), (int, float)):
+                problems.append(f"{path.name}: jit block missing {k}")
+        if jit.get("identical_reports") is not True:
+            problems.append(f"{path.name}: jit vs numpy BatchReport "
+                            f"identity not asserted")
+        if jit.get("asserted") and isinstance(jit.get("speedup_warm"),
+                                              (int, float)) \
+                and jit["speedup_warm"] < 5.0:
+            problems.append(f"{path.name}: asserted warm jit speedup "
+                            f"{jit['speedup_warm']:.2f} below the 5x floor")
+    for blk in ("prefix_cache_on", "prefix_cache_off"):
+        if not isinstance(data.get(blk, {}).get("seconds"), (int, float)):
+            problems.append(f"{path.name}: missing {blk} timing")
+    if data.get("identical_reports") is not True:
+        problems.append(f"{path.name}: prefix-cache BatchReport identity "
+                        f"not asserted")
+    return problems
+
+
 #: every attribution bucket a trace export may carry; fault-free exports
 #: omit fault_lost (see repro.obs.attribution.BUCKETS)
 _BUCKETS = ("compute", "fill_drain", "bw_stall", "fault_lost",
@@ -115,6 +146,8 @@ def check_telemetry() -> int:
             problems += _check_model_serving(path)
         if path.name == "BENCH_fault_tolerance.json":
             problems += _check_fault_tolerance(path)
+        if path.name == "BENCH_online_scaling.json":
+            problems += _check_online_scaling(path)
     traces = sorted(RESULTS.glob("*.trace.json"))
     for path in traces:
         try:

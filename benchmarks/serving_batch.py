@@ -10,6 +10,12 @@ p99 request latency (cycles), makespan, and MACs/cycle throughput, all on
 the fast simulation backend (results are backend-independent; the parity
 suite pins reference == fast).
 
+Also: the whole-scenario ``vmap`` demo -- an arrival-rate sweep (same
+request universe, arrival epochs rescaled per variant) settled as ONE
+vmapped launch of the jitted whole-trace arbiter
+(:func:`repro.multicore.jitarb.finish_times_many`), each variant's report
+asserted bit-identical to a sequential numpy-client run.
+
 Results go to ``benchmarks/results/BENCH_serving_batch.json`` -- uploaded
 by CI next to the other benchmark artifacts.
 
@@ -19,18 +25,30 @@ by CI next to the other benchmark artifacts.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import math
+import os
+import time
 from pathlib import Path
 
-import common  # noqa: F401  -- puts <repo>/src on sys.path
+# legacy XLA:CPU emitter for the vmapped arbitration demo -- ~8x faster on
+# this program's tiny while-loop bodies, bit-identical results (asserted
+# below); must be set before the first jax import (see online_scaling.py)
+_FLAG = "--xla_cpu_use_thunk_runtime=false"
+if _FLAG.split("=")[0] not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = \
+        (os.environ.get("XLA_FLAGS", "") + " " + _FLAG).strip()
 
-from repro.multicore import ChipConfig
-from repro.obs import TelemetryConfig, write_trace
-from repro.obs.attribution import BUCKETS
-from repro.serving.simbatch import (POLICIES, run_batcher, skewed_trace,
-                                    synthetic_trace)
+import common  # noqa: F401,E402  -- puts <repo>/src on sys.path
 
-from common import RESULTS, emit, write_bench  # type: ignore
+from repro.multicore import ChipConfig, jitarb  # noqa: E402
+from repro.obs import TelemetryConfig, write_trace  # noqa: E402
+from repro.obs.attribution import BUCKETS  # noqa: E402
+from repro.serving.simbatch import (POLICIES,  # noqa: E402
+                                    report_from_finishes, run_batcher,
+                                    skewed_trace, synthetic_trace)
+
+from common import RESULTS, emit, write_bench  # type: ignore  # noqa: E402
 
 #: offered-load sweep: mean inter-arrival gap in epochs (small = heavy)
 LOADS = (1, 4, 16)
@@ -47,6 +65,59 @@ def _cell(rep) -> dict:
         "throughput_macs_per_cycle": rep.throughput_macs_per_cycle,
         "admit_epochs": list(rep.admit_epochs),
     }
+
+
+#: arrival-rate sweep factors: each variant compresses the base trace's
+#: arrival epochs by this much (smaller = heavier offered load)
+RATE_FACTORS = (1.0, 0.5, 0.25)
+
+
+def rate_sweep_vmap(smoke: bool = False) -> dict:
+    """The whole-serving-scenario ``vmap`` demo: an arrival-rate sweep of
+    one request universe runs as ONE device launch.
+
+    Every variant keeps the same request shapes and only rescales the
+    arrival epochs, so :func:`repro.multicore.jitarb.plan_many` unifies
+    the trace table and :func:`finish_times_many` settles all variants in
+    a single vmapped XLA call.  Each variant's ``BatchReport`` must be
+    bit-identical to a sequential numpy-client run (asserted) -- the
+    sweep changes the launch shape, never the answer.
+    """
+    n_req = 24 if smoke else 64
+    base = synthetic_trace(n_req, seed=3, mean_gap=4, d_model=128,
+                           prompt_lens=(16, 32, 64), decode_steps=(1, 2),
+                           decode_batch=8)
+    chip_np = ChipConfig(n_cores=4, design="RASA-WLBP",
+                         bw_bytes_per_cycle=32.0, backend="fast")
+    chip_jit = dataclasses.replace(chip_np, backend="jax")
+    variants = [[dataclasses.replace(r, arrival_epoch=int(r.arrival_epoch
+                                                          * f))
+                 for r in base] for f in RATE_FACTORS]
+
+    plans = jitarb.plan_many([[(r.arrival_epoch, r.specs) for r in v]
+                              for v in variants], chip_jit)
+    assert plans is not None, "sweep unexpectedly outside the jitarb domain"
+    t0 = time.perf_counter()
+    outs = jitarb.finish_times_many(plans)
+    t_vmap = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    oracles = [run_batcher(v, chip_np, policy="fixed", batch_size=1)
+               for v in variants]
+    t_seq = time.perf_counter() - t0
+
+    cells = {}
+    for f, v, fin, oracle in zip(RATE_FACTORS, variants, outs, oracles):
+        rep = report_from_finishes(v, chip_jit, fin)
+        assert rep == oracle, \
+            f"vmapped variant x{f} diverged from the sequential numpy " \
+            f"client -- the sweep may only change the launch shape"
+        cells[f"x{f}"] = {"makespan": rep.makespan,
+                          "p50_latency": rep.p50_latency,
+                          "p99_latency": rep.p99_latency}
+    return {"n_requests": n_req, "factors": list(RATE_FACTORS),
+            "seconds_vmap_launch": t_vmap, "seconds_numpy_seq": t_seq,
+            "identical_reports": True, "cells": cells}
 
 
 def run(smoke: bool = False) -> dict:
@@ -93,6 +164,8 @@ def run(smoke: bool = False) -> dict:
     write_trace(skew_reports["occupancy"].telemetry,
                 RESULTS / "serving_skewed.trace.json")
 
+    table["rate_sweep_vmap"] = rate_sweep_vmap(smoke)
+
     write_bench("serving_batch", table, backend="fast")
     return table
 
@@ -123,6 +196,19 @@ def main(argv=None) -> None:
     ratio = t["skewed"]["occupancy_vs_fixed_makespan"]
     print(f"occupancy-aware makespan = {ratio:.3f}x fixed-batch "
           f"(lower is better; <1 required)")
+
+    rs = t["rate_sweep_vmap"]
+    print(f"\n# arrival-rate sweep as ONE vmapped launch "
+          f"({rs['n_requests']} requests x {len(rs['factors'])} variants)")
+    for key, v in rs["cells"].items():
+        print(f"{key:<12} makespan={v['makespan']:>12.0f} "
+              f"p50={v['p50_latency']:>10.0f} p99={v['p99_latency']:>10.0f}")
+    print(f"one launch {rs['seconds_vmap_launch']:.2f}s (incl. one-off "
+          f"compile; see online_scaling.py for at-scale timings) vs "
+          f"sequential numpy {rs['seconds_numpy_seq']:.2f}s (identical "
+          f"BatchReports: {rs['identical_reports']})")
+    emit("serving_rate_sweep_vmap", rs["seconds_vmap_launch"] * 1e6,
+         f"variants={len(rs['factors'])};n={rs['n_requests']}")
 
 
 if __name__ == "__main__":

@@ -485,6 +485,13 @@ def run_segment(trace: CompiledTrace, cfg: EngineConfig,
     next_snap = len(op) + 1
     if snap_stride is not None:
         next_snap = (i0 // snap_stride + 1) * snap_stride
+        if carry is not None:
+            # the boundary snapshot: a resumed run re-emits its carry-in,
+            # so the returned list is self-contained -- the state at i0
+            # is recorded even when resuming exactly on a stride boundary
+            # (callers that re-seed from returned snaps would otherwise
+            # lose the i0 checkpoint and replay up to a full stride)
+            snaps.append(carry)
 
     for i in range(i0, len(op)):
         if i == next_snap:
@@ -577,7 +584,8 @@ def run_segment(trace: CompiledTrace, cfg: EngineConfig,
 
 
 def completed_prefix(trace: CompiledTrace, cfg: EngineConfig,
-                     params: StreamModelParams, limit: float) -> int:
+                     params: StreamModelParams, limit: float,
+                     carry: SimCarry | None = None) -> int:
     """How many leading instructions of ``trace`` have fully retired by
     time ``limit`` (engine-local cycles) under ``params``'s schedule.
 
@@ -591,7 +599,18 @@ def completed_prefix(trace: CompiledTrace, cfg: EngineConfig,
     bit-identical on every backend) and stops at the first instruction
     that completes after ``limit``: returns ``k`` such that instructions
     ``[0, k)`` are done and instruction ``k`` is not.
+
+    ``carry`` resumes the replay from a :class:`SimCarry` recorded by
+    :func:`run_segment` under the *same* ``params`` schedule.  Valid only
+    when ``carry.t_end <= limit``: ``t_end`` is the max completion time
+    over instructions ``[0, carry.i)``, so none of them can be the first
+    violator and the cut from ``carry.i`` on is bit-identical to the
+    full replay -- repeated preemptions of one segment then replay only
+    the work past its latest checkpoint instead of its whole history.
     """
+    if carry is not None and carry.t_end > limit:
+        raise ValueError("completed_prefix carry is past the limit: an "
+                         "instruction before carry.i may be the cut")
     wl = cfg.wl_cycles
     fs = cfg.fs_cycles
     dr = cfg.dr_cycles
@@ -677,14 +696,29 @@ def completed_prefix(trace: CompiledTrace, cfg: EngineConfig,
     tms = trace.tm.tolist()
     reus = trace.reusable.tolist()
 
-    reg_ready = [0.0] * NUM_TREGS
-    p_ff_start = -1.0
-    p_ff_end = p_fs_end = p_dr_end = 0.0
-    have_prev = False
-    wl_port_free = 0.0
-    next_free = store_next = 0.0
+    if carry is None:
+        i0 = 0
+        reg_ready = [0.0] * NUM_TREGS
+        p_ff_start = -1.0
+        p_ff_end = p_fs_end = p_dr_end = 0.0
+        have_prev = False
+        wl_port_free = 0.0
+        next_free = store_next = 0.0
+    else:
+        i0 = carry.i
+        reg_ready = list(carry.reg_ready)
+        p_ff_start = carry.p_ff_start
+        p_ff_end = carry.p_ff_end
+        p_fs_end = carry.p_fs_end
+        p_dr_end = carry.p_dr_end
+        have_prev = carry.have_prev
+        wl_port_free = carry.wl_port_free
+        next_free = carry.next_free
+        store_next = carry.store_next
+        tokens = carry.tokens
+        bt = carry.bt
 
-    for i in range(len(op)):
+    for i in range(i0, len(op)):
         o = op[i]
         t_issue = i / issue_per_cycle
 
@@ -776,8 +810,16 @@ CHUNK = 16384
 
 
 @functools.lru_cache(maxsize=8)
-def _jax_fns(port_model: bool, emit_ends: bool = False):
-    import jax
+def _sim_chunk_fn(port_model: bool, emit_ends: bool = False):
+    """Build the raw (unjitted) per-instruction scan program.
+
+    Returns ``sim_chunk(carry, xs, idx, design, bucket)``: one
+    ``lax.scan`` over a chunk of compiled-trace columns, threading the
+    15-slot timing carry.  :func:`_jax_fns` wraps it in the two jitted
+    vmap layouts; :mod:`repro.multicore.jitarb` embeds it directly inside
+    its whole-trace arbitration program (vmapping and jitting itself), so
+    the scheduling arithmetic lives in exactly one place.
+    """
     import jax.numpy as jnp
     from jax import lax
 
@@ -789,6 +831,17 @@ def _jax_fns(port_model: bool, emit_ends: bool = False):
         (shares, n_shares, E, tail, burst, sched_end, charge_store,
          store_free, inv_store, inv_load) = bucket
         S = shares.shape[0]
+        # XLA:CPU contracts ``tk + rate * dt`` into a fused multiply-add
+        # (one rounding), while the numpy/reference token bucket rounds the
+        # product first -- a 1-ulp drift that breaks oracle parity.  A
+        # select on a runtime-only predicate pins the product: neither the
+        # HLO simplifier (the predicate is unknown) nor LLVM's instruction
+        # selector (the add's operand is a select, not the multiply) can
+        # re-fuse it.
+        rt_true = E == E
+
+        def unfused(x):
+            return lax.select(rt_true, x, jnp.zeros_like(x))
 
         def share_at(t):
             e = jnp.floor(t / E)
@@ -806,13 +859,24 @@ def _jax_fns(port_model: bool, emit_ends: bool = False):
                 step_end = jnp.where(b >= sched_end, t,
                                      jnp.minimum(t, e_end))
                 tk = jnp.where(jnp.isinf(rate), burst,
-                               jnp.minimum(burst, tk + rate * (step_end - b)))
+                               jnp.minimum(burst,
+                                           tk + unfused(rate
+                                                        * (step_end - b))))
                 return tk, step_end
 
+            # a saturated bucket stays saturated: every refill step clamps
+            # ``min(burst, burst + rate*dt)`` with rate >= 0 back to burst,
+            # so jump straight to ``t`` without walking the epochs
+            bt = jnp.where(tokens >= burst, jnp.maximum(bt, t), bt)
             return lax.while_loop(cond, body, (tokens, bt))
 
-        def grant_bucket(tokens, bt, t_earliest, n_bytes):
-            tokens, bt = advance(tokens, bt, t_earliest)
+        def grant_bucket(tokens, bt, t_earliest, n_bytes, want):
+            # ``want=False`` pins every walk to its start (zero iterations)
+            # so ops that discard the grant -- rasa_mm, uncharged stores --
+            # don't spin the bucket up to their issue time for nothing.
+            # Wanting lanes see bit-identical arithmetic either way.
+            tokens, bt = advance(tokens, bt,
+                                 jnp.where(want, t_earliest, bt))
             need = jnp.minimum(n_bytes, burst)
 
             def cond(s):
@@ -829,18 +893,23 @@ def _jax_fns(port_model: bool, emit_ends: bool = False):
                 fin = infr | hit | dead
                 start2 = jnp.where(infr, t,
                                    jnp.where(dead, jnp.inf, t_hit))
-                tk2 = jnp.where(rate > 0.0, tk + rate * (e_end - t), tk)
+                tk2 = jnp.where(rate > 0.0,
+                                tk + unfused(rate * (e_end - t)), tk)
                 return (jnp.where(fin, t, e_end), jnp.where(fin, tk, tk2),
                         jnp.where(fin, start2, start), fin)
 
+            # when the bucket already covers the request the walk's result
+            # is discarded below -- don't spin it
             walked = lax.while_loop(
-                cond, body, (bt, tokens, f64(0.0), jnp.asarray(False)))[2]
+                cond, body, (bt, tokens, f64(0.0),
+                             ~want | (tokens >= need)))[2]
             start = jnp.where(tokens >= need, t_earliest,
                               jnp.maximum(walked, t_earliest))
+            start = jnp.where(want, start, bt)
             tokens, bt = advance(tokens, bt, start)
             return start, tokens - n_bytes, bt
 
-        def grant_port(tokens, bt, t_earliest, n_bytes):
+        def grant_port(tokens, bt, t_earliest, n_bytes, want):
             # infinite tail share, empty schedule: every request is granted
             # the moment the port frees up, the bucket state is inert.
             return t_earliest, tokens, bt
@@ -870,8 +939,9 @@ def _jax_fns(port_model: bool, emit_ends: bool = False):
             t_avail = jnp.maximum(t_issue, rr_ra)
             port_start_ts = jnp.maximum(t_avail, snext)
             req = jnp.where(is_tl, port_start_tl, port_start_ts)
-            gstart, gtokens, gbt = grant(tokens, bt, req, nb)
-            do_grant = is_tl | (is_ts & charge_store & ~store_free)
+            do_grant = is_tl | (is_ts & jnp.logical_and(
+                charge_store, jnp.logical_not(store_free)))
+            gstart, gtokens, gbt = grant(tokens, bt, req, nb, do_grant)
             tokens = jnp.where(do_grant, gtokens, tokens)
             bt = jnp.where(do_grant, gbt, bt)
             start_mem = jnp.where(do_grant, gstart, req)
@@ -964,13 +1034,27 @@ def _jax_fns(port_model: bool, emit_ends: bool = False):
                              unroll=8)
         return final, ys
 
+    return sim_chunk
+
+
+#: bucket in_axes of the two vmap layouts below (and of
+#: ``multicore.jitarb``'s in-program lane vmap, which must mirror
+#: ``_B_CORES``): the cores layout maps shares / n_shares / tail /
+#: sched_end per lane, everything else is shared.
+_B_SWEEP = ((None,) * 9) + (0,)          # bucket: inv_load per design
+_B_CORES = (0, 0, None, 0, None, 0) + ((None,) * 4)
+
+
+@functools.lru_cache(maxsize=8)
+def _jax_fns(port_model: bool, emit_ends: bool = False):
+    import jax
+
+    sim_chunk = _sim_chunk_fn(port_model, emit_ends)
     # two vmap layouts: `sweep` shares one trace across design lanes (the
     # shared xs keeps every per-step op a cheap scalar-indexed slice);
     # `cores` gives each lane its own trace under one shared design --
     # with the share schedule per lane (shares / n_shares / tail /
     # sched_end), which is what weighted epoch arbitration produces.
-    _B_SWEEP = ((None,) * 9) + (0,)          # bucket: inv_load per design
-    _B_CORES = (0, 0, None, 0, None, 0) + ((None,) * 4)
     sweep = jax.jit(jax.vmap(sim_chunk, in_axes=(0, None, None, 0, _B_SWEEP)))
     cores = jax.jit(jax.vmap(sim_chunk, in_axes=(0, 0, None, None, _B_CORES)))
     return sweep, cores

@@ -259,14 +259,19 @@ class SpanArbiter:
     # -- schedule state ----------------------------------------------------
     @property
     def share_trace(self) -> tuple[float, ...]:
-        """Converged bytes/cycle per unit weight, per epoch."""
+        """Converged bytes/cycle per unit weight, per epoch.
+
+        Epochs with no active demanding span report ``0.0``: nothing is
+        flowing, so rendering the full budget there (as the pre-fix code
+        did) painted fully-idle epochs as fully-shared in
+        ``ChipReport.share_trace`` and the Perfetto counter tracks.
+        """
         b = self.budget
         fac = self.budget_factors
         if not fac:
-            return tuple(b / w if w else b for w in self._wsum)
+            return tuple(b / w if w else 0.0 for w in self._wsum)
         nf = len(fac)
-        return tuple((b * fac[e] if e < nf else b) / w
-                     if w else (b * fac[e] if e < nf else b)
+        return tuple((b * fac[e] if e < nf else b) / w if w else 0.0
                      for e, w in enumerate(self._wsum))
 
     @property

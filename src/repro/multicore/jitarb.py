@@ -1,0 +1,604 @@
+"""Whole-trace jitted span arbitration: an online serving run as ONE XLA
+program.
+
+The incremental client (:class:`repro.multicore.online.OnlineChip`) walks
+an arrival trace on the host: every start boundary marks the in-flight
+spans dirty, relaxes the share fixed point, and re-simulates dirty
+segments -- with ``backend="jax"`` one batched scan per relaxation round.
+For very long traces the remaining host work (the boundary event loop and
+one device dispatch per round) dominates.  This module lowers that *whole
+loop* into a single ``lax.while_loop`` program:
+
+* the arbiter's **settled-prefix cache is a carried array**: ``wsum[e]``
+  holds the per-epoch active-weight sums, ``nw`` (the settled horizon) and
+  ``dirty_from`` are data, and each settle rewrites only the
+  ``[dirty_from, horizon)`` window via ``dynamic_update_slice`` -- the
+  literal array form of the incremental rebuild;
+* **retired spans are masked, not pruned**: each core lane carries only
+  its *current* segment (a replaced segment's end always precedes every
+  later boundary, so it is a settled fact -- the same causality argument
+  the host client's retirement rests on), and its contribution lives on
+  in the carried prefix;
+* the host client's **snapshot cache is a carried array too**: every
+  relaxation re-sim records the 15-slot timing carry at each
+  ``_BLOCK``-instruction boundary, and later rounds resume from the
+  deepest snapshot whose ``last_grant`` precedes the dirty boundary.
+  Such a carry is fully determined by grants in the settled prefix
+  (``bt <= last_grant`` is a step invariant, and engine-side pipeline
+  state depends on the schedule only through grant times), so resuming
+  from it is bit-exact -- and each round costs the dirty *suffix*, not
+  the whole trace;
+* the outer ``while_loop`` replays the boundary event loop (per-core
+  candidate = max(next arrival, core-free epoch); all cores sharing the
+  minimal boundary start together), and an inner ``while_loop`` runs the
+  relaxation rounds, each round re-simulating the non-settled lanes with
+  a block-chunked vmapped :func:`repro.core.fastsim._sim_chunk_fn` scan.
+
+**Domain.** The program covers the serving batcher's ``fixed`` admission
+policy with ``batch_size=1`` on a homogeneous fault-free chip under
+``share_policy="equal"`` -- the regime where the weight sums are integer
+counts (exact in any summation order) and admission degenerates to
+"assign request *r* of the arrival-sorted order to core ``r % n_cores``".
+:func:`plan` returns ``None`` outside this domain and callers fall back
+to the incremental client; inside it, results are **bit-identical** to
+the numpy oracle (pinned by ``tests/test_online_jax.py`` and asserted at
+scale by ``benchmarks/online_scaling.py``):
+
+* the per-instruction scan is the shared ``sim_chunk`` program (bit-exact
+  with the numpy token bucket);
+* every share is the same expression numpy evaluates
+  (``budget / wsum[e]``, tails ``budget / w_forever`` open and ``budget``
+  closed), and with the power-of-two ``epoch_cycles`` all boundary
+  arithmetic (``floor(last_grant / E)``, ``ceil(finish / E)``) is exact;
+* skip rules only avoid re-simulating values that could not change
+  (settled spans are frozen, resumes replay the settled prefix's exact
+  state), so the program walks the *same* end-estimate trajectory to the
+  same fixed point as the host relaxation.
+
+Since everything dynamic enters as arrays, arrival traces ``vmap``: an
+arrival-rate sweep runs as one device launch (:func:`finish_times_many`,
+demonstrated by ``benchmarks/serving_batch.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Sequence
+
+import numpy as np
+
+from ..core.designs import EngineConfig
+from ..core.fastsim import _design_scalars, _pow2, has_jax, run_segment
+from ..core.isa import NUM_TREGS
+from ..core.tiling import GemmSpec
+from ..core.trace import OP_NOP, CompiledTrace, compiled_trace
+from .arbiter import MAX_ARBITER_ROUNDS
+from .chip import ChipConfig, demands_bandwidth, stream_model_params
+
+__all__ = ["plan", "plan_many", "finish_times", "finish_times_many", "Plan"]
+
+#: snapshot granularity of the in-program resume cache (instructions per
+#: simulated block); trace columns are padded to a multiple of this
+_BLOCK = 64
+
+
+# --------------------------------------------------------------------------
+# host-side planning
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Plan:
+    """Host-precomputed arrays for one (or many) kernel launches.
+
+    Everything the kernel needs that depends only on the *chip and the
+    request shapes* is shared; the per-trace arrays (arrivals, queue
+    assignment, trace ids) are what an arrival-rate sweep maps over.
+    """
+
+    chip: ChipConfig
+    engine: EngineConfig
+    cols: tuple                 # 7 stacked trace columns, each [U, L]
+    tr_len: np.ndarray          # [U] i32 true (unpadded) trace lengths
+    arrival: np.ndarray         # [N] f64 arrival epochs (sorted order)
+    qidx: np.ndarray            # [C, maxQ] i32 sorted ranks per core
+    qlen: np.ndarray            # [C] i32
+    tid_of: np.ndarray          # [N] i32 trace id per sorted rank
+    order: np.ndarray           # [N] caller index per sorted rank
+    S: int                      # share-window epochs (>= max span length)
+    H: int                      # carried-schedule epochs
+    maxq: int
+
+
+def _uniform_specs(chip: ChipConfig) -> bool:
+    head = chip.core_specs[0]
+    return all(cs == head for cs in chip.core_specs)
+
+
+def _stack_cols(traces: Sequence[CompiledTrace], length: int) -> tuple:
+    padded = [t.padded(length) for t in traces]
+    return tuple(
+        np.stack([(tr.opcode, tr.r_dst, tr.r_a, tr.r_b, tr.nbytes, tr.tm,
+                   tr.reusable)[f] for tr in padded])
+        for f in range(7))
+
+
+def plan(traffic: Sequence[tuple[int, Sequence[GemmSpec]]],
+         chip: ChipConfig) -> Plan | None:
+    """Precompute the kernel inputs for one arrival trace.
+
+    ``traffic`` is ``(arrival_epoch, specs)`` per request, in caller
+    order.  Returns ``None`` when the trace or chip falls outside the
+    jitted program's domain (the caller then uses the incremental
+    client); raising here would turn a routing decision into an error.
+    """
+    if not traffic or not has_jax():
+        return None
+    if chip.backend != "jax" or chip.arbitration != "epoch":
+        return None
+    if getattr(chip.share_policy, "name", "") != "equal":
+        return None
+    if chip.fault_plan is not None and not chip.fault_plan.is_empty:
+        return None
+    if not _uniform_specs(chip):
+        return None
+    E = chip.epoch_cycles
+    if not (math.isfinite(E) and E > 0
+            and math.log2(E).is_integer()):
+        return None     # power-of-two epochs make t/E arithmetic exact
+    budget = chip.bw_bytes_per_cycle
+    if not math.isfinite(budget):
+        return None
+
+    spec0 = chip.core_specs[0]
+    engine, policy = spec0.engine, spec0.policy
+    C = chip.n_cores
+    N = len(traffic)
+    order_in = sorted(range(N), key=lambda i: traffic[i][0])
+
+    keys: dict[tuple, int] = {}
+    traces: list[CompiledTrace] = []
+    tid_of = np.zeros(N, dtype=np.int32)
+    arrival = np.zeros(N, dtype=np.float64)
+    for r, i in enumerate(order_in):
+        ep, specs = traffic[i]
+        key = tuple(dataclasses.replace(s, name="") for s in specs)
+        t = keys.get(key)
+        if t is None:
+            t = keys[key] = len(traces)
+            traces.append(compiled_trace(key, policy))
+        tid_of[r] = t
+        arrival[r] = float(ep)
+    for tr in traces:
+        if len(tr) == 0 or not demands_bandwidth(chip, None, tr):
+            return None     # zero-traffic segments take the host path
+
+    # sound per-segment span bound: every relaxed share is >= budget / C
+    # (at most C unit-weight spans are active), so a segment's epoch count
+    # under any reachable schedule is bounded by its constant-min-share run
+    lens = []
+    for tr in traces:
+        res, _, _ = run_segment(
+            tr, engine, stream_model_params(chip, engine, (), E, budget / C))
+        lens.append(int(res.cycles // E) + 2)
+    l_max = max(lens)
+
+    qlen = np.zeros(C, dtype=np.int32)
+    for r in range(N):
+        qlen[r % C] += 1
+    maxq = int(qlen.max())
+    qidx = np.full((C, max(1, maxq)), -1, dtype=np.int32)
+    fill = np.zeros(C, dtype=np.int32)
+    for r in range(N):
+        c = r % C
+        qidx[c, fill[c]] = r
+        fill[c] += 1
+
+    # an open span's visible prefix can reach the horizon set by another
+    # lane, at most ~2 span lengths past its own start (see module docs)
+    S = _pow2(2 * l_max + 4, lo=8)
+    H = int(arrival.max()) + (maxq + 2) * l_max + S + 8
+    L = -(-max(len(t) for t in traces) // _BLOCK) * _BLOCK
+    return Plan(chip=chip, engine=engine, cols=_stack_cols(traces, L),
+                tr_len=np.asarray([len(t) for t in traces],
+                                  dtype=np.int32),
+                arrival=arrival, qidx=qidx, qlen=qlen, tid_of=tid_of,
+                order=np.asarray(order_in, dtype=np.int64),
+                S=S, H=H, maxq=max(1, maxq))
+
+
+# --------------------------------------------------------------------------
+# the program
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=8)
+def _kernel(C: int, N: int, maxq: int, U: int, L: int, S: int, H: int,
+            design: tuple, charge_store: bool, store_free: bool,
+            max_rounds: int):
+    """Build (jit, vmapped-jit) of the whole-trace program for one static
+    shape/design signature.  Everything dynamic -- arrivals, queues,
+    trace columns, the budget -- is a traced argument, so same-shape
+    launches (an arrival sweep, a re-run) reuse the executable."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    from ..core.fastsim import _B_CORES, _sim_chunk_fn
+
+    lane_sim = jax.vmap(_sim_chunk_fn(False, False),
+                        in_axes=(0, 0, None, None, _B_CORES))
+    INF = jnp.inf
+    NB = L // _BLOCK
+    tree = jax.tree_util.tree_map
+
+    def program(cols, tr_len, arrival, qidx, qlen, tid_of,
+                E, budget, burst, inv_load, inv_store, packed=True):
+        f64 = jnp.float64
+
+        def fresh_carry():
+            z = jnp.zeros((C,), f64)
+            return (jnp.zeros((C, NUM_TREGS), f64),
+                    jnp.full((C,), -1.0, f64), z, z, z,
+                    jnp.zeros((C,), bool), z, z,
+                    jnp.zeros((C,), jnp.int32), z, z, z, z,
+                    jnp.full((C,), burst, f64), z)
+
+        # In the single-trace kernel snapshots live in ONE flat f64 buffer
+        # [C, NB+1, D]: a packed 15-element carry per block boundary, so
+        # one concatenate + one scatter per simulated block replaces 15 of
+        # each -- on CPU the per-block dispatch cost is what the resume
+        # cache trades against.  bool/int32 fields roundtrip through f64
+        # exactly.  The vmapped kernel keeps the 15-array tuple form:
+        # batched scatters into one wide buffer lower to a slower generic
+        # scatter than the per-field updates do.
+        LG = NUM_TREGS + 11         # packed column of ``last_grant``
+
+        def pack(cy):
+            return jnp.concatenate(
+                [cy[0]] + [(c if c.dtype == jnp.float64
+                            else c.astype(f64))[:, None] for c in cy[1:]],
+                axis=1)
+
+        def unpack(p):
+            R = NUM_TREGS
+
+            def at(i):
+                return p[:, R + i]
+
+            return (p[:, :R], at(0), at(1), at(2), at(3), at(4) != 0.0,
+                    at(5), at(6), at(7).astype(jnp.int32), at(8), at(9),
+                    at(10), at(11), at(12), at(13))
+
+        def blank_snaps():
+            # snapshot slot k of lane l = the carry before block k; slot 0
+            # is the fresh segment state, deeper slots start invalid (an
+            # inf last_grant never precedes a dirty boundary)
+            if packed:
+                snaps = jnp.repeat(pack(fresh_carry())[:, None, :],
+                                   NB + 1, axis=1)
+                return snaps.at[:, 1:, LG].set(INF)
+            snaps = tree(
+                lambda a: jnp.repeat(a[:, None, ...], NB + 1, axis=1),
+                fresh_carry())
+            return snaps[:12] + (snaps[12].at[:, 1:].set(INF),) + snaps[13:]
+
+        def reset_snaps(snaps, starts):
+            if packed:
+                return jnp.where(starts[:, None, None], blank_snaps(),
+                                 snaps)
+            return tree(
+                lambda a, blank: jnp.where(
+                    starts[:, None, None] if a.ndim == 3
+                    else starts[:, None], blank, a),
+                snaps, blank_snaps())
+
+        def snap_lg(snaps):
+            return snaps[:, :, LG] if packed else snaps[12]
+
+        def snap_read(snaps, k0):
+            if packed:
+                return unpack(snaps[jnp.arange(C), k0])
+            return tree(lambda a: a[jnp.arange(C), k0], snaps)
+
+        def snap_write(snaps, b, act, carry):
+            if packed:
+                return snaps.at[:, b + 1].set(
+                    jnp.where(act[:, None], pack(carry), snaps[:, b + 1]))
+            return tree(
+                lambda s, c: s.at[:, b + 1].set(
+                    jnp.where(act[:, None] if c.ndim == 2 else act,
+                              c, s[:, b + 1])),
+                snaps, carry)
+
+        def settle(wsum, nw, tid, cur, start, ends, lg, te, snaps, d, mxn,
+                   p_sh, p_nsh, p_tail):
+            """One arbiter settle: zero-fill the idle gap, then relax."""
+            e_all = jnp.arange(H, dtype=f64)
+            wsum = jnp.where((e_all >= nw) & (e_all < d), 0.0, wsum)
+            live = tid >= 0
+            need = live & jnp.isinf(ends)   # dirty or just-started spans
+            tid_s = jnp.maximum(tid, 0)
+            lane_cols = tuple(c[tid_s] for c in cols)       # [C, L]
+            nblk = (tr_len[tid_s] + (_BLOCK - 1)) // _BLOCK  # [C]
+            cutoff = (d - start) * E        # settled-time limit, per lane
+
+            def resim(snaps, bucket, sim, fc):
+                """Re-simulate the ``sim`` lanes under the current shares.
+
+                A snapshot is reusable when every grant it has absorbed
+                lies either in the settled prefix (frozen forever) or
+                before the first epoch whose visible share differs from
+                the lane's previous sim -- so each lane resumes from its
+                deepest such snapshot instead of instruction zero."""
+                lim = jnp.maximum(fc * E, cutoff)
+                valid = snap_lg(snaps) < lim[:, None]        # [C, NB+1]
+                k0 = jnp.max(jnp.where(valid,
+                                       jnp.arange(NB + 1, dtype=jnp.int32),
+                                       0), axis=1)           # [C]
+                blo = jnp.min(jnp.where(sim, k0, NB + 1))
+                bhi = jnp.max(jnp.where(sim, nblk, 0))
+                carry = snap_read(snaps, k0)
+
+                def block(bs):
+                    b, carry, snaps = bs
+                    act = sim & (k0 <= b) & (b < nblk)
+                    off = b * _BLOCK
+                    xs = tuple(
+                        lax.dynamic_slice(cc, (jnp.zeros_like(off), off),
+                                          (C, _BLOCK))
+                        for cc in lane_cols)
+                    idx = (off + jnp.arange(_BLOCK)).astype(f64)
+                    new = lane_sim(carry, xs, idx, design, bucket)[0]
+                    carry = tree(
+                        lambda a, n: jnp.where(
+                            act[:, None] if n.ndim == 2 else act, n, a),
+                        carry, new)
+                    snaps = snap_write(snaps, b, act, carry)
+                    return b + 1, carry, snaps
+
+                bF, carry, snaps = lax.while_loop(
+                    lambda bs: bs[0] < bhi, block, (blo, carry, snaps))
+                return carry[7], carry[12], snaps, bF - blo
+
+            def round_body(st):
+                (wsum, nw, ends, lg, te, r, _, mxn, snaps, blk,
+                 p_sh, p_nsh, p_tail) = st
+                closed = live & jnp.isfinite(ends)
+                horizon = jnp.maximum(
+                    d, jnp.max(jnp.where(closed, ends, d)))
+                k = jnp.arange(S, dtype=f64)
+                e = d + k                                       # [S]
+                hi = jnp.where(jnp.isinf(ends), horizon, ends)  # [C]
+                act = (live[:, None] & (start[:, None] <= e[None, :])
+                       & (e[None, :] < hi[:, None]))
+                win = jnp.sum(act, axis=0).astype(f64)
+                wsum = lax.dynamic_update_slice(
+                    wsum, win, (d.astype(jnp.int32),))
+                open_ = live & jnp.isinf(ends)
+                wf = jnp.sum(open_).astype(f64)
+                n_sh = jnp.where(jnp.isinf(ends), horizon - start,
+                                 ends - start)
+                mxn = jnp.maximum(mxn,
+                                  jnp.max(jnp.where(need, n_sh, 0.0)))
+                n_sh = jnp.clip(n_sh, 0.0, float(S))
+                tail = jnp.where(open_, budget / wf, budget)
+                gidx = jnp.clip(
+                    start[:, None].astype(jnp.int32)
+                    + jnp.arange(S, dtype=jnp.int32)[None, :], 0, H - 1)
+                shares = budget / wsum[gidx]                    # [C, S]
+                bucket = (shares, n_sh, E, tail, burst, n_sh * E,
+                          charge_store, store_free, inv_store, inv_load)
+                # first epoch whose visible share differs from the lane's
+                # previous sim: epochs below it replay identically, so an
+                # unchanged lane is skipped outright (the host relaxation's
+                # unchanged-visibility skip) and a changed one resumes from
+                # its deepest snapshot before the divergence
+                m = jnp.minimum(n_sh, p_nsh)
+                diff = (k[None, :] < m[:, None]) & (shares != p_sh)
+                fc = jnp.min(jnp.where(diff, k[None, :], INF), axis=1)
+                cap = jnp.where((n_sh != p_nsh) | (tail != p_tail), m, INF)
+                fc = jnp.minimum(fc, cap)
+                sim = need & jnp.isfinite(fc)
+                te_n, lg_n, snaps, nblks = resim(snaps, bucket, sim, fc)
+                te = jnp.where(sim, te_n, te)
+                lg = jnp.where(sim, lg_n, lg)
+                sel = sim[:, None]
+                p_sh = jnp.where(sel, shares, p_sh)
+                p_nsh = jnp.where(sim, n_sh, p_nsh)
+                p_tail = jnp.where(sim, tail, p_tail)
+                e_new = start + jnp.floor(lg / E) + 1.0
+                e_new = jnp.where(need, jnp.minimum(e_new, ends), ends)
+                conv = jnp.all(e_new == ends)
+                return (wsum, horizon, e_new, lg, te, r + 1, conv, mxn,
+                        snaps, blk + nblks, p_sh, p_nsh, p_tail)
+
+            st = (wsum, nw, ends, lg, te, jnp.int32(0),
+                  jnp.asarray(False), mxn, snaps, jnp.int32(0),
+                  p_sh, p_nsh, p_tail)
+            st = lax.while_loop(
+                lambda s: (~s[6]) & (s[5] < max_rounds), round_body, st)
+            return (st[0], st[1], st[2], st[3], st[4], st[7], st[8],
+                    st[5], st[9], st[10], st[11], st[12])
+
+        def outer_body(c):
+            (qhead, tid, cur, start, ends, lg, te, wsum, nw, finish,
+             mxn, mxd, snaps, _, _, p_sh, p_nsh, p_tail) = c
+            has_q = qhead < qlen
+            alive = jnp.any(has_q)
+            nxt = qidx[jnp.arange(C), jnp.minimum(qhead, maxq - 1)]
+            nxt_s = jnp.clip(nxt, 0, N - 1)
+            free = jnp.maximum(start, jnp.ceil((start * E + te) / E))
+            free = jnp.where(tid >= 0, free, 0.0)
+            b_c = jnp.where(has_q, jnp.maximum(free, arrival[nxt_s]), INF)
+            bstar = jnp.min(b_c)
+            starts = has_q & (b_c == bstar)
+            tid2 = jnp.where(starts, tid_of[nxt_s], tid)
+            cur2 = jnp.where(starts, nxt_s, cur)
+            start2 = jnp.where(starts, bstar, start)
+            ends2 = jnp.where(starts, INF, ends)
+            lg2 = jnp.where(starts, 0.0, lg)
+            te2 = jnp.where(starts, 0.0, te)
+            qhead2 = qhead + starts.astype(qhead.dtype)
+            snaps2 = reset_snaps(snaps, starts)
+            # a fresh span has no previous sim: p_nsh = -1 forces a full
+            # first simulation and invalidates every non-fresh snapshot
+            p_nsh2 = jnp.where(starts, -1.0, p_nsh)
+            p_tail2 = jnp.where(starts, -1.0, p_tail)
+            # the boundary event reopens every span still active there
+            ends2 = jnp.where((tid2 >= 0) & (ends2 > bstar), INF, ends2)
+            (wsum2, nw2, ends2, lg2, te2, mxn2, snaps2, n_r, n_b,
+             p_sh2, p_nsh2, p_tail2) = settle(
+                wsum, nw, tid2, cur2, start2, ends2, lg2, te2, snaps2,
+                bstar, mxn, p_sh, p_nsh2, p_tail2)
+            slot = jnp.where(tid2 >= 0, cur2, N)
+            finish2 = finish.at[slot].set(
+                jnp.where(tid2 >= 0, start2 * E + te2, finish[slot]))
+            mxd2 = jnp.maximum(mxd, bstar)
+            new = (qhead2, tid2, cur2, start2, ends2, lg2, te2, wsum2,
+                   nw2, finish2, mxn2, mxd2, snaps2,
+                   c[13] + n_r, c[14] + n_b, p_sh2, p_nsh2, p_tail2)
+            # vmapped launches batch the while_loop: keep dead lanes'
+            # state bit-frozen so their carried schedule stays settled
+            return tree(lambda a, b: jnp.where(alive, a, b), new, c)
+
+        z = jnp.zeros((C,), f64)
+        c0 = (jnp.zeros(C, dtype=qlen.dtype),
+              jnp.full((C,), -1, jnp.int32), jnp.zeros(C, jnp.int32),
+              z, jnp.full((C,), -INF, f64), z, z,
+              jnp.zeros((H,), f64), jnp.asarray(0.0, f64),
+              jnp.zeros((N + 1,), f64), jnp.asarray(0.0, f64),
+              jnp.asarray(0.0, f64), blank_snaps(),
+              jnp.int32(0), jnp.int32(0),
+              jnp.zeros((C, S), f64), jnp.full((C,), -1.0, f64),
+              jnp.full((C,), -1.0, f64))
+        cF = lax.while_loop(lambda c: jnp.any(c[0] < qlen), outer_body, c0)
+        return cF[9][:N], cF[10], cF[11], cF[13], cF[14]
+
+    one = jax.jit(functools.partial(program, packed=True))
+    many = jax.jit(jax.vmap(
+        functools.partial(program, packed=False),
+        in_axes=((None, None, 0, 0, 0, 0) + (None,) * 5)))
+    return one, many
+
+
+def _launch_args(p: Plan):
+    params = stream_model_params(p.chip, p.engine)
+    store_free = params.store_ports is None
+    statics = (p.chip.n_cores, len(p.arrival), p.maxq, p.cols[0].shape[0],
+               p.cols[0].shape[1], p.S, p.H, _design_scalars(p.engine),
+               bool(params.charge_store_bytes), store_free,
+               MAX_ARBITER_ROUNDS)
+    scalars = (np.float64(p.chip.epoch_cycles),
+               np.float64(p.chip.bw_bytes_per_cycle),
+               np.float64(p.chip.bw_burst_bytes),
+               np.float64(1.0 / params.load_ports),
+               np.float64(1.0 / params.store_ports) if not store_free
+               else np.float64(1.0))
+    return statics, scalars
+
+
+def _check(p: Plan, mxn: float, mxd: float) -> None:
+    if mxn > p.S or mxd > p.H - p.S - 1:
+        raise RuntimeError(
+            f"jitted arbitration window bound violated (span epochs "
+            f"{mxn} vs window {p.S}, boundary {mxd} vs schedule "
+            f"{p.H - p.S - 1}): the host span bound is unsound here")
+
+
+def finish_times(p: Plan, stats: dict | None = None) -> np.ndarray:
+    """Run one planned trace; absolute finish cycles in caller order.
+
+    When ``stats`` is given, the kernel's relaxation-round and
+    simulated-block counters are recorded into it (benchmark diagnostics).
+    """
+    from jax.experimental import enable_x64
+
+    statics, scalars = _launch_args(p)
+    fn = _kernel(*statics)[0]
+    with enable_x64():
+        fin, mxn, mxd, n_r, n_b = fn(p.cols, p.tr_len, p.arrival, p.qidx,
+                                     p.qlen, p.tid_of, *scalars)
+        fin = np.asarray(fin)
+        _check(p, float(mxn), float(mxd))
+        if stats is not None:
+            stats["rounds"] = int(n_r)
+            stats["blocks"] = int(n_b)
+    out = np.zeros(len(fin), dtype=np.float64)
+    out[p.order] = fin
+    return out
+
+
+def finish_times_many(plans: Sequence[Plan]) -> list[np.ndarray]:
+    """Run a family of same-shape plans (e.g. an arrival-rate sweep) as
+    one vmapped launch.  All plans must come from :func:`plan_many`."""
+    from jax.experimental import enable_x64
+
+    head = plans[0]
+    statics, scalars = _launch_args(head)
+    fn = _kernel(*statics)[1]
+    with enable_x64():
+        fin, mxn, mxd, _, _ = fn(head.cols, head.tr_len,
+                           np.stack([p.arrival for p in plans]),
+                           np.stack([p.qidx for p in plans]),
+                           np.stack([p.qlen for p in plans]),
+                           np.stack([p.tid_of for p in plans]), *scalars)
+        fin = np.asarray(fin)
+        for p, x, d in zip(plans, np.asarray(mxn), np.asarray(mxd)):
+            _check(p, float(x), float(d))
+    outs = []
+    for v, p in enumerate(plans):
+        out = np.zeros(fin.shape[1], dtype=np.float64)
+        out[p.order] = fin[v]
+        outs.append(out)
+    return outs
+
+
+def plan_many(traffics: Sequence[Sequence[tuple[int, Sequence[GemmSpec]]]],
+              chip: ChipConfig) -> list[Plan] | None:
+    """Plan several arrival traces over the *same* request-shape universe
+    so they share one executable (common trace table, window and horizon
+    bounds).  Returns ``None`` if any variant falls outside the domain or
+    the variants disagree on request count."""
+    plans = [plan(t, chip) for t in traffics]
+    if any(p is None for p in plans) or not plans:
+        return None
+    n = {len(p.arrival) for p in plans}
+    if len(n) != 1:
+        return None
+    # unify shapes: same trace table, same S/H/maxq across variants
+    key_of: dict[bytes, int] = {}
+    all_cols: list[tuple] = []
+    all_len: list[int] = []
+    remap: list[np.ndarray] = []
+    L = max(p.cols[0].shape[1] for p in plans)
+    for p in plans:
+        pad = L - p.cols[0].shape[1]
+        ids = np.zeros(p.cols[0].shape[0], dtype=np.int32)
+        for u in range(p.cols[0].shape[0]):
+            row = tuple(
+                np.concatenate([c[u], np.full(pad, OP_NOP if f == 0 else 0,
+                                              dtype=c[u].dtype)])
+                for f, c in enumerate(p.cols))
+            sig = b"".join(np.ascontiguousarray(a).tobytes() for a in row)
+            t = key_of.get(sig)
+            if t is None:
+                t = key_of[sig] = len(all_cols)
+                all_cols.append(row)
+                all_len.append(int(p.tr_len[u]))
+            ids[u] = t
+        remap.append(ids)
+    cols = tuple(np.stack([tc[f] for tc in all_cols])
+                 for f in range(7))
+    tr_len = np.asarray(all_len, dtype=np.int32)
+    S = max(p.S for p in plans)
+    H = max(p.H for p in plans)
+    maxq = max(p.maxq for p in plans)
+    out = []
+    for p, ids in zip(plans, remap):
+        qidx = np.full((p.qidx.shape[0], maxq), -1, dtype=np.int32)
+        qidx[:, :p.qidx.shape[1]] = p.qidx
+        out.append(dataclasses.replace(
+            p, cols=cols, tr_len=tr_len, tid_of=ids[p.tid_of],
+            qidx=qidx, S=S, H=H, maxq=maxq))
+    return out

@@ -40,13 +40,18 @@ closed batch uses, with staggered span starts):
 
 Backends follow the chip model's contract: ``backend="reference"`` is the
 oracle (each re-simulation replays the full stream through
-:class:`~repro.core.timing.PipelineSimulator`); the fast backends run the
-trace-compiled numpy recurrence and *resume* each re-simulation from the
-latest :class:`~repro.core.fastsim.SimCarry` snapshot taken before the
-first epoch whose share changed, instead of replaying the prefix
-(``backend="jax"`` also uses the numpy segment runner here: online
-segments are far below the batched-scan break-even).  Results are
-backend-independent; ``tests/test_fastsim.py`` pins the parity.
+:class:`~repro.core.timing.PipelineSimulator`); ``backend="fast"`` /
+``"numpy"`` run the trace-compiled numpy recurrence and *resume* each
+re-simulation from the latest :class:`~repro.core.fastsim.SimCarry`
+snapshot taken before the first epoch whose share changed, instead of
+replaying the prefix.  ``backend="jax"`` batches instead of resuming:
+each relaxation round hands *all* of its dirty segments to one vmapped
+:func:`~repro.core.fastsim.run_cores` scan (grouped by engine config and
+bucket shape, so heterogeneous chips and ``slow_core``-dilated lanes
+split into their own lanes automatically) -- one device dispatch per
+round in place of one Python token-bucket replay per segment.  Results
+are backend-independent and the jax lane is bit-exact with numpy
+(``tests/test_online_jax.py`` pins BatchReport equality end to end).
 
 The serving batcher (:mod:`repro.serving.simbatch`) drives this model:
 admission policies query :meth:`OnlineChip.core_busy` /
@@ -64,7 +69,7 @@ from collections import deque
 from typing import Sequence
 
 from ..core.fastsim import (SNAP_STRIDE, SimCarry, completed_prefix,
-                            run_segment)
+                            run_cores, run_segment)
 from ..core.tiling import GemmSpec
 from ..core.timing import PipelineSimulator, TimingResult
 from ..core.trace import (OP_MM, OP_TL, OP_TS, CompiledTrace, compile_stream,
@@ -189,6 +194,10 @@ class OnlineChip:
         self._E = chip.epoch_cycles
         self._budget = chip.bw_bytes_per_cycle
         self._ref = chip.backend == "reference"
+        #: jax fast lane: settle rounds batch all dirty segments into one
+        #: vmapped scan (``_simulate_batch``) instead of per-segment
+        #: snapshot-resumed numpy replays.  Bit-exact with numpy.
+        self._jax = chip.backend == "jax"
         #: the fault plan driving core_down/up preemption, budget derating
         #: and slow cores; ``None`` when faults are off (the common case:
         #: every fault hook below is gated on it, so an empty plan is
@@ -233,7 +242,8 @@ class OnlineChip:
         #: instrumentation: arbiter settles/rounds and how the fast path
         #: re-simulated (full replays vs. snapshot resumes vs. pure skips).
         self.stats = {"settles": 0, "rounds": 0, "sims_full": 0,
-                      "sims_resumed": 0, "instrs_resumed_past": 0}
+                      "sims_resumed": 0, "instrs_resumed_past": 0,
+                      "preempt_replay_instrs": 0}
 
     # ------------------------------------------------------------ driver
     def submit(self, core: int, specs: Sequence[GemmSpec]) -> Segment:
@@ -572,8 +582,21 @@ class OnlineChip:
                                          self._E, tail)
         trace = seg.trace if seg.trace is not None \
             else compile_stream(seg.stream)
-        n_done = completed_prefix(trace, engine, params,
-                                  (T - span.start * self._E) * f)
+        limit = (T - span.start * self._E) * f
+        # resume the cut replay from the segment's latest checkpoint whose
+        # completions all land at or before the boundary (recorded under
+        # the same settled schedule ``params`` was built from) -- repeated
+        # preemptions then replay only the work past the last snapshot
+        # instead of the whole segment history each time
+        cut_carry = None
+        for c in seg._snaps:
+            if c.t_end <= limit and (cut_carry is None
+                                     or c.i > cut_carry.i):
+                cut_carry = c
+        n_done = completed_prefix(trace, engine, params, limit,
+                                  carry=cut_carry)
+        self.stats["preempt_replay_instrs"] += \
+            n_done - (cut_carry.i if cut_carry else 0)
         target = self._pick_target()
         if target is None:
             target = seg.core        # all cores down: wait for a core_up
@@ -743,12 +766,44 @@ class OnlineChip:
         else:
             dirty_from = int(self._dirty_from)
 
-        def simulate(jobs):
-            for i, prefix, tail in jobs:
-                self._simulate(segs[i], (prefix, tail))
+        if self._jax:
+            def simulate(jobs):
+                self._simulate_batch(segs, jobs)
+        else:
+            def simulate(jobs):
+                for i, prefix, tail in jobs:
+                    self._simulate(segs[i], (prefix, tail))
 
-        trace = self._arb.relax(spans, simulate, dirty_from=dirty_from,
-                                collect_trace=False)
+        # The settle is transactional: if relax (or a simulate callback)
+        # raises, the arbiter's rebuilt suffix and every span/segment it
+        # touched are restored, and the dirty marker survives -- so a
+        # retry sees exactly the pre-settle state instead of a half
+        # rebuilt schedule disagreeing with a cleared marker.
+        arb = self._arb
+        d0 = dirty_from if arb.prefix_cache else 0
+        saved_w, saved_n = arb._wsum[d0:], arb._nact[d0:]
+        saved_stamp = arb._stamp
+        saved = [(s.span.end, s.span.last_grant, s.span.throttled,
+                  s.span._vis, s.span._stamp, s.result, s._snaps)
+                 for s in segs]
+        try:
+            trace = arb.relax(spans, simulate, dirty_from=dirty_from,
+                              collect_trace=False)
+        except BaseException:
+            del arb._wsum[d0:]
+            arb._wsum.extend(saved_w)
+            del arb._nact[d0:]
+            arb._nact.extend(saved_n)
+            arb._stamp = saved_stamp
+            for s, (end, lg, th, vis, stamp, res, snaps) in zip(segs, saved):
+                s.span.end = end
+                s.span.last_grant = lg
+                s.span.throttled = th
+                s.span._vis = vis
+                s.span._stamp = stamp
+                s.result = res
+                s._snaps = snaps
+            raise
         self.stats["rounds"] += trace.rounds
         self._dirty = False
         self._dirty_from = math.inf
@@ -809,8 +864,10 @@ class OnlineChip:
                 seg._snaps = snaps
                 self.stats["sims_full"] += 1
             else:
+                # snaps now leads with the carry-in itself (the boundary
+                # snapshot), so keep strictly-earlier checkpoints only
                 seg._snaps = [c for c in seg._snaps
-                              if c.i <= carry.i] + snaps
+                              if c.i < carry.i] + snaps
                 self.stats["sims_resumed"] += 1
                 self.stats["instrs_resumed_past"] += carry.i
         if f != 1.0:
@@ -821,6 +878,61 @@ class OnlineChip:
         seg.result = res
         seg.span.last_grant = last_grant
         seg.span.throttled = res.bw_stall_cycles != 0.0
+
+    def _simulate_batch(self, segs: list[Segment], jobs) -> None:
+        """One relaxation round's re-simulations as a single batched call.
+
+        The jax lane of :meth:`_settle`: every dirty bucket-throttled
+        segment in the round becomes one lane of a vmapped
+        :func:`run_cores` scan.  ``run_cores`` groups lanes by engine
+        config and bucket shape, so heterogeneous chips and slow-core
+        dilated time bases (``E * speed`` epochs) land in their own
+        compiled executables without special-casing here.  Lanes whose
+        visible schedule reduces to the unthrottled port model -- the
+        non-demanding segments, each simulated exactly once -- keep the
+        host path: they cannot amortize a separate port-model compile.
+
+        Snapshot checkpoints are not recorded on this path (the batch
+        re-simulates from scratch every round, which is exactly what the
+        vmapped scan is fast at); a later preemption of a jax-simulated
+        segment falls back to the full ``completed_prefix`` replay.
+        """
+        batch: list[tuple[Segment, object, object, float]] = []
+        for i, prefix, tail in jobs:
+            seg = segs[i]
+            if seg.preempted_at is not None:
+                # settled fact, same as the host path
+                continue
+            engine = self.chip.core_specs[seg.core].engine
+            f = seg.speed
+            if f != 1.0:
+                params = stream_model_params(self.chip, engine,
+                                             tuple(s / f for s in prefix),
+                                             self._E * f, tail / f)
+            else:
+                params = stream_model_params(self.chip, engine, prefix,
+                                             self._E, tail)
+            if params.is_port_model:
+                self._simulate(seg, (prefix, tail))
+                continue
+            batch.append((seg, engine, params, f))
+        if not batch:
+            return
+        out = run_cores([seg.trace for seg, _, _, _ in batch],
+                        [engine for _, engine, _, _ in batch],
+                        [params for _, _, params, _ in batch],
+                        backend="jax")
+        for (seg, _, _, f), (res, last_grant) in zip(batch, out):
+            if f != 1.0:
+                res = dataclasses.replace(
+                    res, cycles=res.cycles / f,
+                    bw_stall_cycles=res.bw_stall_cycles / f)
+                last_grant = last_grant / f
+            seg.result = res
+            seg.span.last_grant = last_grant
+            seg.span.throttled = res.bw_stall_cycles != 0.0
+            seg._snaps = []
+            self.stats["sims_full"] += 1
 
     # ------------------------------------------------ checkpoint/resume
     def snapshot(self) -> "OnlineSnapshot":

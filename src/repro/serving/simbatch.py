@@ -147,6 +147,29 @@ class ServeRequest:
         return 2 * self.prefill_macs >= self.macs
 
 
+def arrival_process(n_requests: int, seed: int, mean_gap: int,
+                    prompt_lens: Sequence[int], decode_steps: Sequence[int]
+                    ) -> tuple[tuple[int, int, int, int], ...]:
+    """The shared ``(i, arrival_epoch, prompt, steps)`` draw sequence.
+
+    One RNG arrival loop serves both :func:`synthetic_trace` and
+    :func:`model_trace`: inter-arrival gaps uniform on ``[0, 2*mean_gap]``
+    epochs (``mean_gap`` is the offered-load knob; smaller = heavier
+    load), prompt lengths and decode-chain lengths drawn from the given
+    menus.  A seed therefore produces the *same* arrival pattern in both
+    trace builders -- only the per-request GEMM lowering differs.
+    """
+    rng = random.Random(seed)
+    draws, epoch = [], 0
+    for i in range(n_requests):
+        if i:
+            epoch += rng.randrange(0, 2 * mean_gap + 1)
+        prompt = rng.choice(tuple(prompt_lens))
+        steps = rng.choice(tuple(decode_steps))
+        draws.append((i, epoch, prompt, steps))
+    return tuple(draws)
+
+
 def synthetic_trace(n_requests: int = 16, *, seed: int = 0,
                     mean_gap: int = 2, d_model: int = 512,
                     prompt_lens: Sequence[int] = (32, 64, 128),
@@ -154,20 +177,14 @@ def synthetic_trace(n_requests: int = 16, *, seed: int = 0,
                     decode_batch: int = 8) -> tuple[ServeRequest, ...]:
     """Deterministic synthetic request trace.
 
-    Inter-arrival gaps are uniform on ``[0, 2 * mean_gap]`` epochs, so
-    ``mean_gap`` is the offered-load knob (smaller = heavier load); prompt
-    lengths and decode-chain lengths are drawn from the given menus.  Each
+    Arrivals and shape draws come from :func:`arrival_process`.  Each
     request is ``prefill[M=prompt, K=N=d_model]`` followed by
     ``decode[M=decode_batch, K=N=d_model]`` per step -- the Fig. 7 shapes,
     one layer GEMM standing in for the model's layer stack.
     """
-    rng = random.Random(seed)
-    reqs, epoch = [], 0
-    for i in range(n_requests):
-        if i:
-            epoch += rng.randrange(0, 2 * mean_gap + 1)
-        prompt = rng.choice(tuple(prompt_lens))
-        steps = rng.choice(tuple(decode_steps))
+    reqs = []
+    for i, epoch, prompt, steps in arrival_process(
+            n_requests, seed, mean_gap, prompt_lens, decode_steps):
         prefill = GemmSpec(f"r{i}.prefill", M=prompt, K=d_model, N=d_model)
         decode = tuple(GemmSpec(f"r{i}.d{j}", M=decode_batch, K=d_model,
                                 N=d_model) for j in range(steps))
@@ -222,13 +239,9 @@ def model_trace(arch, n_requests: int = 16, *, seed: int = 0,
     if options is None:
         options = CompileOptions(dim_cap=1024, max_layers=2)
     name = arch if isinstance(arch, str) else arch.name
-    rng = random.Random(seed)
-    reqs, epoch = [], 0
-    for i in range(n_requests):
-        if i:
-            epoch += rng.randrange(0, 2 * mean_gap + 1)
-        prompt = rng.choice(tuple(prompt_lens))
-        steps = rng.choice(tuple(decode_steps))
+    reqs = []
+    for i, epoch, prompt, steps in arrival_process(
+            n_requests, seed, mean_gap, prompt_lens, decode_steps):
         prefill = compile_workload(arch, batch=1, seq=prompt,
                                    phase="prefill", options=options).specs
         step = compile_workload(arch, batch=decode_batch, seq=prompt,
@@ -701,6 +714,53 @@ def run_batcher(requests: Sequence[ServeRequest],
     names = [r.name for r in requests]
     if len(set(names)) != len(names):
         raise ValueError("request names must be unique")
+    if (policy == "fixed" and batch_size == 1 and prefix_cache
+            and not telemetry.enabled and chip.backend == "jax"
+            and requests and all(r.deadline is None for r in requests)):
+        # whole-trace fast lane: one jitted program replays the full
+        # arbitration (see repro.multicore.jitarb; bit-identical to the
+        # incremental client, pinned by tests/test_online_jax.py)
+        from ..multicore import jitarb
+        plan = jitarb.plan([(r.arrival_epoch, r.specs) for r in requests],
+                           chip)
+        if plan is not None:
+            return report_from_finishes(requests, chip,
+                                        jitarb.finish_times(plan))
     return _Batcher(requests, chip, policy, batch_size, min_share,
                     snap_stride, lookahead, prefix_cache, telemetry,
                     max_attempts, backoff_epochs, max_prefills).run()
+
+
+def report_from_finishes(requests: Sequence[ServeRequest],
+                         chip: ChipConfig,
+                         finishes: Sequence[float]) -> BatchReport:
+    """Assemble the ``fixed``-policy :class:`BatchReport` from absolute
+    finish cycles in caller order -- the jitted whole-trace arbitration
+    (:mod:`repro.multicore.jitarb`) returns only those, and every other
+    report field is a closed form of the inputs on its domain (no
+    deadlines: every request is admitted at its arrival epoch and served
+    within deadline by definition)."""
+    E = chip.epoch_cycles
+    fins = tuple(float(f) for f in finishes)
+    first = min((r.arrival_epoch for r in requests), default=0) * E
+    macs = sum(r.macs for r in requests)
+    return BatchReport(
+        policy="fixed",
+        design=chip.design_name,
+        n_cores=chip.n_cores,
+        n_requests=len(requests),
+        epoch_cycles=E,
+        makespan=max(fins, default=first) - first,
+        names=tuple(r.name for r in requests),
+        latencies=tuple(f - r.arrival_epoch * E
+                        for r, f in zip(requests, fins)),
+        finish_times=fins,
+        arrival_epochs=tuple(r.arrival_epoch for r in requests),
+        admit_epochs=tuple(r.arrival_epoch for r in requests),
+        macs=macs,
+        deadline_miss_rate=0.0,
+        retries=0,
+        abandoned=0,
+        served_macs=macs,
+        telemetry=None,
+    )

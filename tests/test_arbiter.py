@@ -98,7 +98,25 @@ def test_rebuild_pads_idle_gap():
     # chip idle during epochs 2..5, new span at 5
     arb._rebuild([Span(start=5, end=7, demands=True)], 5)
     assert arb.active_trace == (1, 1, 0, 0, 0, 1, 1)
-    assert arb.share_trace[3] == 16.0      # idle epoch: full budget
+    assert arb.share_trace[3] == 0.0       # idle epoch: nothing flows
+
+
+def test_idle_epoch_share_is_zero():
+    """Fully-idle epochs report 0.0 shared bandwidth, not the full budget.
+
+    Pre-fix, ``share_trace`` rendered ``budget`` for epochs with
+    ``_wsum[e] == 0`` (in both the plain and ``budget_factors`` branches),
+    painting idle gaps as fully-shared in ``ChipReport.share_trace`` and
+    the Perfetto counter tracks."""
+    spans = [Span(start=0, end=2, demands=True),
+             Span(start=4, end=6, demands=True)]
+    arb = SpanArbiter(16.0, 256.0)
+    arb._rebuild(spans, 0)
+    assert arb.share_trace == (16.0, 16.0, 0.0, 0.0, 16.0, 16.0)
+    # derated variant: busy epochs scale with the factor, idle stays 0.0
+    arb = SpanArbiter(16.0, 256.0, budget_factors=(1.0, 0.5, 0.5, 0.5))
+    arb._rebuild(spans, 0)
+    assert arb.share_trace == (16.0, 8.0, 0.0, 0.0, 16.0, 16.0)
 
 
 # ------------------------------------------- single-implementation guard

@@ -153,6 +153,49 @@ def test_completed_prefix_monotone_and_bounded():
     assert last == len(trace)
 
 
+def test_two_preemptions_resume_from_checkpoints(monkeypatch):
+    """Repeated ``core_down`` preemptions of one segment replay only the
+    work past its latest valid snapshot when computing the cut, never the
+    whole history.  Pre-fix, every preemption's ``completed_prefix`` cut
+    replayed the segment from instruction 0 -- up to a full snapshot
+    stride of re-simulation per preemption, compounding across repeated
+    outages of the same logical segment."""
+    import repro.multicore.online as online_mod
+    stride = 64
+    spec = GemmSpec("long", 128, 256, 256)
+    kw = dict(n_cores=2, design="RASA-WLBP", bw_bytes_per_cycle=16.0,
+              backend="fast")
+
+    clean = OnlineChip(ChipConfig(**kw), snap_stride=stride)
+    h = clean.submit(0, [spec])
+    clean.drain()
+    F = math.ceil(clean.finish_time(h) / clean.chip.epoch_cycles)
+    assert F >= 9            # room for two mid-flight outages
+
+    plan = FaultPlan((core_down(0, F // 3), core_up(0, F // 3 + 1),
+                      core_down(1, 2 * F // 3), core_up(1, 2 * F // 3 + 1)))
+    cuts, replays = [], []
+    orig = online_mod.completed_prefix
+
+    def spy(trace, cfg, params, limit, *args, **kwargs):
+        carry = kwargs.get("carry", args[0] if args else None)
+        n = orig(trace, cfg, params, limit, *args, **kwargs)
+        cuts.append(n)
+        replays.append(n - (carry.i if carry is not None else 0))
+        return n
+
+    monkeypatch.setattr(online_mod, "completed_prefix", spy)
+    sim = OnlineChip(ChipConfig(fault_plan=plan, **kw), snap_stride=stride)
+    sim.submit(0, [spec])
+    sim.drain()
+    assert sim.n_preempted == 2 and len(cuts) == 2
+    # meaningful scenario: each cut lands well past the first checkpoints
+    assert all(n > 2 * stride for n in cuts)
+    # the fix: each replay covers at most the tail past the last snapshot
+    assert all(r <= 2 * stride for r in replays)
+    assert sim.stats.get("preempt_replay_instrs") == sum(replays)
+
+
 # --------------------------------------------- closed-batch fault client
 def test_core_down_preempts_migrates_and_logs():
     plan = FaultPlan((core_down(0, 2), core_up(0, 12)))

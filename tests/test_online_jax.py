@@ -1,0 +1,197 @@
+"""Jitted whole-trace arbitration parity suite.
+
+``repro.multicore.jitarb`` lowers the serving batcher's entire online
+settle into one XLA program; on its domain (``fixed`` admission,
+``batch_size=1``, equal shares, homogeneous fault-free chip) the
+``BatchReport`` must be **bit-identical** -- not approximately equal --
+to the numpy incremental client.  Pinned here:
+
+* in-domain parity across all eight designs, workload shapes, core
+  counts, bandwidths and a real-model (``model_trace``) request stream;
+* the ``plan`` gate: every out-of-domain configuration (demand shares,
+  heterogeneous mixes, active ``FaultPlan``, other policies/batch sizes,
+  non-power-of-two epochs) returns ``None`` -- and ``run_batcher`` still
+  answers through the incremental-client fallback, agreeing with
+  ``backend="fast"``;
+* the vmapped sweep (``plan_many``/``finish_times_many``) agreeing with
+  per-variant sequential runs;
+* a hypothesis property drawing random small traces.
+
+Everything is exact equality on purpose: the jitted program replays the
+same share expressions and the same token-bucket arithmetic, so any ulp
+of drift is a bug (see the FMA note in ``repro.core.fastsim``).
+"""
+
+import dataclasses
+
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core.fastsim import has_jax
+from repro.multicore import ChipConfig
+from repro.multicore.faults import FaultPlan, core_down, core_up
+from repro.multicore.jitarb import plan, plan_many, finish_times_many
+from repro.serving.simbatch import (model_trace, report_from_finishes,
+                                    run_batcher, synthetic_trace)
+
+pytestmark = pytest.mark.skipif(not has_jax(), reason="jax not installed")
+
+ALL_DESIGNS = ("BASE", "RASA-DB-WLBP", "RASA-DB-WLS", "RASA-DM-PIPE",
+               "RASA-DM-WLBP", "RASA-DMDB-WLS", "RASA-PIPE", "RASA-WLBP")
+
+
+def _trace(n=10, seed=1, mean_gap=2, d_model=128, **kw):
+    kw.setdefault("prompt_lens", (16, 32))
+    kw.setdefault("decode_steps", (1, 2))
+    kw.setdefault("decode_batch", 8)
+    return synthetic_trace(n, seed=seed, mean_gap=mean_gap,
+                           d_model=d_model, **kw)
+
+
+def _chips(**kw):
+    kw.setdefault("n_cores", 2)
+    kw.setdefault("design", "RASA-WLBP")
+    kw.setdefault("bw_bytes_per_cycle", 32.0)
+    fast = ChipConfig(backend="fast", **kw)
+    return fast, dataclasses.replace(fast, backend="jax")
+
+
+def _traffic(requests):
+    return [(r.arrival_epoch, r.specs) for r in requests]
+
+
+def _assert_identical(requests, fast, jax_chip, **batcher_kw):
+    batcher_kw.setdefault("policy", "fixed")
+    batcher_kw.setdefault("batch_size", 1)
+    a = run_batcher(requests, fast, **batcher_kw)
+    b = run_batcher(requests, jax_chip, **batcher_kw)
+    assert a == b           # bit-identical BatchReport, every field
+    return a
+
+
+# ------------------------------------------------------ in-domain parity
+@pytest.mark.parametrize("design", ALL_DESIGNS)
+def test_all_designs_bit_identical(design):
+    """Every design's jitted settle equals the numpy client exactly --
+    per-design grant rules (WLBP skips, WLS, double-buffering, pipe
+    overlap) all flow through the same shared scan program."""
+    fast, jx = _chips(design=design)
+    requests = _trace(8, seed=3)
+    assert plan(_traffic(requests), jx) is not None
+    _assert_identical(requests, fast, jx)
+
+
+@pytest.mark.parametrize("kw", [
+    dict(n_cores=1),
+    dict(n_cores=3, bw_bytes_per_cycle=48.0),
+    dict(n_cores=4, bw_bytes_per_cycle=16.0),   # bandwidth-starved
+], ids=["one-core", "three-core", "starved"])
+def test_shapes_and_contention_bit_identical(kw):
+    fast, jx = _chips(**kw)
+    requests = _trace(12, seed=4, mean_gap=1)   # overlapping spans
+    _assert_identical(requests, fast, jx)
+
+
+def test_burst_arrivals_bit_identical():
+    """All requests in one epoch: every boundary coincides, the deepest
+    relaxation case."""
+    fast, jx = _chips(n_cores=2)
+    requests = _trace(8, seed=6, mean_gap=0)
+    _assert_identical(requests, fast, jx)
+
+
+def test_model_trace_bit_identical():
+    """Real-model request streams (compiled per-layer prefill + decode
+    GEMM chains) stay inside the domain and agree exactly."""
+    requests = model_trace("gemma-2b", 6, seed=2, mean_gap=2,
+                           prompt_lens=(32,), decode_steps=(1, 2))
+    fast, jx = _chips(n_cores=2, bw_bytes_per_cycle=48.0)
+    assert plan(_traffic(requests), jx) is not None
+    _assert_identical(requests, fast, jx)
+
+
+def test_vmapped_sweep_matches_sequential():
+    """An arrival-rate sweep settled as ONE vmapped launch equals the
+    per-variant sequential runs."""
+    base = _trace(8, seed=5, mean_gap=3)
+    fast, jx = _chips(n_cores=2)
+    variants = [[dataclasses.replace(r, arrival_epoch=int(r.arrival_epoch
+                                                          * f))
+                 for r in base] for f in (1.0, 0.5, 0.0)]
+    plans = plan_many([_traffic(v) for v in variants], jx)
+    assert plans is not None
+    outs = finish_times_many(plans)
+    for v, fin in zip(variants, outs):
+        want = run_batcher(v, fast, policy="fixed", batch_size=1)
+        assert report_from_finishes(v, jx, fin) == want
+
+
+# ------------------------------------------------- plan gate + fallback
+def test_gate_demand_shares_falls_back():
+    """Demand-weighted shares are outside the jitted domain: ``plan``
+    declines, and the jax-backend batcher answers via the incremental
+    client -- still agreeing with fast."""
+    fast, jx = _chips(share_policy="demand")
+    requests = _trace(6, seed=7)
+    assert plan(_traffic(requests), jx) is None
+    _assert_identical(requests, fast, jx)
+
+
+def test_gate_heterogeneous_mix_falls_back():
+    fast, jx = _chips()
+    fast = dataclasses.replace(fast, n_cores=None, design=None,
+                               cores=("BASE", "RASA-WLBP"))
+    jx = dataclasses.replace(jx, n_cores=None, design=None,
+                             cores=("BASE", "RASA-WLBP"))
+    requests = _trace(6, seed=8)
+    assert plan(_traffic(requests), jx) is None
+    _assert_identical(requests, fast, jx)
+
+
+def test_gate_active_fault_plan_falls_back():
+    fp = FaultPlan((core_down(0, 2), core_up(0, 12)))
+    fast, jx = _chips(n_cores=2, fault_plan=fp)
+    requests = _trace(6, seed=9)
+    assert plan(_traffic(requests), jx) is None
+    _assert_identical(requests, fast, jx)
+
+    # the *empty* plan is a no-op by construction and stays in-domain
+    fast0, jx0 = _chips(n_cores=2, fault_plan=FaultPlan())
+    assert plan(_traffic(requests), jx0) is not None
+    _assert_identical(requests, fast0, jx0)
+
+
+def test_gate_other_policies_and_batch_sizes():
+    """Only ``fixed``@1 routes to the kernel; everything else is served
+    by the incremental client (and still matches fast exactly)."""
+    fast, jx = _chips(n_cores=2)
+    requests = _trace(6, seed=10)
+    for kw in (dict(policy="occupancy"), dict(policy="fixed",
+                                              batch_size=2)):
+        _assert_identical(requests, fast, jx, **kw)
+
+
+def test_gate_requires_jax_backend_and_pow2_epochs():
+    requests = _trace(4, seed=11)
+    fast, jx = _chips()
+    assert plan(_traffic(requests), fast) is None       # backend gate
+    odd = dataclasses.replace(jx, epoch_cycles=1000.0)  # not a power of 2
+    assert plan(_traffic(requests), odd) is None
+    assert plan([], jx) is None                         # empty trace
+
+
+# ------------------------------------------------------------- property
+@given(st.integers(0, 2 ** 16))
+@settings(max_examples=8, deadline=None)
+def test_random_traces_bit_identical(seed):
+    """Random small arrival traces: the jitted settle is bit-identical
+    to the numpy client wherever ``plan`` accepts."""
+    import random
+    rng = random.Random(seed)
+    fast, jx = _chips(n_cores=rng.choice((1, 2, 3)),
+                      design=rng.choice(ALL_DESIGNS),
+                      bw_bytes_per_cycle=rng.choice((16.0, 32.0, 64.0)))
+    requests = _trace(rng.randrange(1, 9), seed=seed % 1024,
+                      mean_gap=rng.choice((0, 1, 3)))
+    assert plan(_traffic(requests), jx) is not None
+    _assert_identical(requests, fast, jx)

@@ -298,6 +298,86 @@ def test_online_chip_live_queries():
         oc.finish_time(queued)
 
 
+# ------------------------------------------------ shared arrival process
+def test_arrival_process_pinned_and_shared():
+    """The RNG arrival loop exists once (``arrival_process``): its draw
+    sequence is pinned so the synthetic/model trace dedup is provably
+    behavior-preserving, and a seed yields the same arrival pattern in
+    both builders."""
+    from repro.serving.simbatch import arrival_process, model_trace
+    menus = dict(prompt_lens=(32, 64, 128), decode_steps=(2, 4, 8))
+    # generated by the pre-dedup synthetic_trace loop at seed=3, mean_gap=2
+    assert arrival_process(8, 3, 2, **menus) == (
+        (0, 0, 32, 8), (1, 4, 32, 4), (2, 8, 64, 8), (3, 12, 32, 8),
+        (4, 12, 64, 4), (5, 16, 32, 2), (6, 19, 128, 8), (7, 22, 64, 8))
+    syn = synthetic_trace(8, seed=3, mean_gap=2, d_model=64, **menus)
+    assert tuple((r.arrival_epoch, r.specs[0].M, len(r.decode))
+                 for r in syn) == (
+        (0, 32, 8), (4, 32, 4), (8, 64, 8), (12, 32, 8), (12, 64, 4),
+        (16, 32, 2), (19, 128, 8), (22, 64, 8))
+    # the model-trace builder sees the identical arrival pattern
+    mdl = model_trace("qwen3-1.7b", 8, seed=3, mean_gap=2,
+                      prompt_lens=(16,), decode_steps=(2, 4, 8))
+    assert tuple(r.arrival_epoch for r in mdl) == \
+        tuple(e for _, e, _, _ in arrival_process(8, 3, 2, prompt_lens=(16,),
+                                                  decode_steps=(2, 4, 8)))
+
+
+# -------------------------------------------------- transactional settle
+def test_settle_transactional_on_failing_simulate():
+    """A settle whose simulate callback raises must leave the chip exactly
+    as it was before the attempt -- arbiter prefix, stamps, per-segment
+    results -- with the dirty marker intact, so the retried settle is
+    bit-identical to a chip that never saw the failure.  Pre-fix, the
+    partially rebuilt ``_wsum`` survived the exception and disagreed with
+    the marker on retry."""
+    requests, kwargs = SCENARIOS["steady"]
+    chip = ChipConfig(backend="fast", **kwargs)
+
+    def drive(sim):
+        n = sim.chip.n_cores
+        for i, r in enumerate(requests):
+            if r.arrival_epoch > sim.epoch:
+                sim.advance_to(r.arrival_epoch)
+            sim.submit(i % n, r.specs)
+        return sim
+
+    clean = drive(OnlineChip(chip))
+    clean.drain()
+
+    sim = drive(OnlineChip(chip))
+    arb = sim._arb
+    pre_wsum, pre_nact = list(arb._wsum), list(arb._nact)
+    pre_stamp = arb._stamp
+    pre_segs = [(s.sid, s.result, s._snaps, s.span._vis, s.span.last_grant)
+                for s in sim._active]
+
+    def failing(seg, vis):
+        raise RuntimeError("injected simulate failure")
+
+    sim._simulate = failing
+    with pytest.raises(RuntimeError, match="injected simulate failure"):
+        sim.drain()            # queued segments start -> dirty -> settle
+
+    # the failed attempt must not have torn any settle state
+    assert list(arb._wsum) == pre_wsum
+    assert list(arb._nact) == pre_nact
+    assert arb._stamp == pre_stamp
+    by_sid = {s.sid: s for s in sim._active}
+    for sid, result, snaps, vis, lg in pre_segs:
+        s = by_sid[sid]
+        assert s.result is result and s._snaps is snaps
+        assert s.span._vis == vis and s.span.last_grant == lg
+    assert sim._dirty                      # marker survives the failure
+
+    del sim._simulate                      # disarm: back to the real one
+    sim.drain()                            # the retry settles cleanly
+    assert sim.makespan == clean.makespan
+    assert sim.share_trace == clean.share_trace
+    assert sim.active_trace == clean.active_trace
+    assert sim.n_retired == clean.n_retired
+
+
 # --------------------------------------------------- hypothesis property
 @settings(max_examples=10, deadline=None)
 @given(seed=st.integers(0, 10 ** 9), n=st.integers(1, 7),
