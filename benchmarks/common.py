@@ -6,6 +6,11 @@ from this file, not the CWD), so every benchmark starts with
 ``import common`` and then imports ``repro.*`` directly -- no per-script
 ``sys.path.insert(0, "src")`` boilerplate that silently breaks when the
 script is launched from anywhere but the repo root.
+
+Importing it also configures ``XLA_FLAGS`` for the jax benchmarks (see
+``XLA_THUNK_FLAG`` below) -- which is why ``import common`` must stay the
+*first* import of every benchmark script: the flag must be set before the
+first jax/XLA import anywhere in the process.
 """
 
 from __future__ import annotations
@@ -14,6 +19,7 @@ import datetime
 import hashlib
 import inspect
 import json
+import os
 import platform
 import subprocess
 import sys
@@ -23,6 +29,33 @@ from pathlib import Path
 _SRC = str(Path(__file__).resolve().parent.parent / "src")
 if _SRC not in sys.path:
     sys.path.insert(0, _SRC)
+
+#: The XLA:CPU thunk runtime dispatches each fused computation through a
+#: buffer-assignment interpreter -- fine for big tensor ops, ~8x overhead
+#: on the jitted arbitration program's long chains of tiny while-loop
+#: bodies.  The legacy emitter compiles the same HLO straight through;
+#: results stay bit-identical (``benchmarks/online_scaling.py`` asserts
+#: jit-vs-numpy ``BatchReport`` equality under this flag on every run).
+#: Knob: set ``RASA_BENCH_XLA_THUNK_RT=1`` to keep the stock thunk
+#: runtime instead (e.g. to measure its cost).
+XLA_THUNK_FLAG = "--xla_cpu_use_thunk_runtime=false"
+
+
+def _setup_xla_flags() -> bool:
+    """Disable the XLA:CPU thunk runtime for this process (idempotent).
+
+    Returns whether the flag is active.  Must run before the first jax
+    import; importing :mod:`common` first does that for every benchmark.
+    """
+    if os.environ.get("RASA_BENCH_XLA_THUNK_RT") == "1":
+        return False
+    if XLA_THUNK_FLAG.split("=")[0] not in os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = \
+            (os.environ.get("XLA_FLAGS", "") + " " + XLA_THUNK_FLAG).strip()
+    return XLA_THUNK_FLAG in os.environ.get("XLA_FLAGS", "")
+
+
+XLA_THUNK_RT_DISABLED = _setup_xla_flags()
 
 RESULTS = Path(__file__).resolve().parent / "results"
 

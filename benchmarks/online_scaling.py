@@ -19,6 +19,18 @@ that compile is reported too and must still beat numpy
 (``JIT_MIN_COLD_SPEEDUP``, asserted).  Measured at 10k requests: 113.1s
 numpy vs. 15.3s cold / 11.0s warm = **7.4x cold / 10.3x warm**.
 
+**Widened-domain points**: one small trace each through reactive
+admission (``occupancy``/``bandwidth``/``predicted``), demand-weighted
+shares, and a mixed BASE/RASA chip -- all settled by the same jitted
+program (PR10's domain extensions) and asserted bit-identical to the
+numpy client, with ``BatchReport.jit_gate`` confirming none of them fell
+back.  A deliberate out-of-domain probe (``phase_aware``) checks the
+structured plan-gate reason.  At ``-n 100000`` and beyond, the sliding
+settled-prefix window's memory contract is asserted too: peak RSS stays
+under ``JIT_MAX_RSS_MB`` regardless of trace horizon (the ``scale_100k``
+block records the design point either way, so CI validates the contract
+from the smoke run).
+
 **Settled-prefix cache** (the earlier acceptance run, capped at 1000
 requests): the numpy client with its settled-prefix cache and retired-span
 pruning vs. the pre-refactor rebuild-from-epoch-0 mode
@@ -55,21 +67,15 @@ import argparse
 import dataclasses
 import os
 import pickle
+import resource
 import time
 from pathlib import Path
 
-# The XLA:CPU thunk runtime dispatches each fused computation through a
-# buffer-assignment interpreter -- fine for big tensor ops, ~8x overhead
-# on this program's long chains of tiny while-loop bodies.  The legacy
-# emitter compiles the same HLO straight through (results stay
-# bit-identical -- the parity asserts below run under this flag).  Must be
-# set before the first jax/XLA import, hence before ``repro.*``.
-_FLAG = "--xla_cpu_use_thunk_runtime=false"
-if _FLAG.split("=")[0] not in os.environ.get("XLA_FLAGS", ""):
-    os.environ["XLA_FLAGS"] = \
-        (os.environ.get("XLA_FLAGS", "") + " " + _FLAG).strip()
-
-import common  # noqa: F401,E402  -- puts <repo>/src on sys.path
+# importing common first also disables the XLA:CPU thunk runtime for this
+# process -- ~8x on this program's tiny while-loop bodies, bit-identical
+# results (the parity asserts below run under the flag; see
+# common.XLA_THUNK_FLAG for the single documented knob)
+import common  # noqa: F401  -- puts <repo>/src on sys.path
 
 from repro.core.fastsim import SNAP_STRIDE  # noqa: E402
 from repro.multicore import ChipConfig, OnlineChip, jitarb  # noqa: E402
@@ -78,12 +84,17 @@ from repro.serving.simbatch import (_Batcher, run_batcher,  # noqa: E402
 
 from common import emit, write_bench  # type: ignore  # noqa: E402
 
-N_JIT_FULL = 10_000     # headline trace length (``-n`` scales to 100k)
+N_JIT_FULL = 10_000     # headline trace length (``-n`` scales to 100k+)
+N_JIT_100K = 100_000    # chunked-window design point (``-n 100000``)
 N_CACHE_FULL = 1000     # rebuild-from-0 baseline is quadratic: capped
 N_SMOKE = 100
 MIN_SPEEDUP = 5.0       # settled-prefix-cache floor, asserted at full scale
 JIT_MIN_SPEEDUP = 5.0   # jitted-vs-numpy settle floor (warm)
 JIT_MIN_COLD_SPEEDUP = 2.0  # incl. the one-off compile, jit must still win
+#: peak-RSS ceiling of the 100k design point: the sliding settled-prefix
+#: window keeps the carried state O(S), so memory must not scale with the
+#: trace horizon (asserted whenever ``-n`` >= 100k)
+JIT_MAX_RSS_MB = 8192.0
 
 #: light per-request shapes: keeps both runs simulation-cheap so the
 #: arbitration cost is what the comparison measures
@@ -126,6 +137,8 @@ def jit_check(n_requests: int, full_scale: bool) -> dict:
     assert rep_jit == rep_np and rep_warm == rep_np, \
         "jitted whole-trace arbitration must produce a bit-identical " \
         "BatchReport vs. the numpy oracle"
+    assert rep_jit.jit_gate is None, \
+        f"headline trace unexpectedly gated: {rep_jit.jit_gate}"
 
     # kernel-side counters (relaxation rounds, block replays) off a warm
     # re-settle -- negligible next to the timed runs above
@@ -135,6 +148,16 @@ def jit_check(n_requests: int, full_scale: bool) -> dict:
     assert p is not None, "trace unexpectedly outside the jitarb domain"
     jitarb.finish_times(p, stats)
 
+    # a deliberately out-of-domain probe: the structured plan-gate reason
+    # is what makes silent numpy fallbacks diagnosable, so its presence
+    # is part of the benchmark contract (validated by run.py)
+    _, gate_probe = jitarb.plan_ex(
+        [(r.arrival_epoch, r.specs) for r in requests[:4]], chip_jit,
+        policy="phase_aware")
+    assert gate_probe == "admission_policy"
+
+    peak_rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss \
+        / 1024.0
     speedup = t_np / t_cold if t_cold else float("inf")
     speedup_warm = t_np / t_warm if t_warm else float("inf")
     if full_scale:
@@ -146,6 +169,11 @@ def jit_check(n_requests: int, full_scale: bool) -> dict:
             f"even counting its one-off compile the jitted path must be " \
             f">= {JIT_MIN_COLD_SPEEDUP}x faster at {n_requests} requests " \
             f"(measured {speedup:.1f}x cold)"
+    if n_requests >= N_JIT_100K:
+        assert peak_rss_mb <= JIT_MAX_RSS_MB, \
+            f"peak RSS {peak_rss_mb:.0f} MB exceeds the " \
+            f"{JIT_MAX_RSS_MB:.0f} MB bound at {n_requests} requests -- " \
+            f"the sliding settled-prefix window must keep memory O(S)"
     return {
         "n_requests": n_requests,
         "asserted": full_scale,
@@ -156,12 +184,62 @@ def jit_check(n_requests: int, full_scale: bool) -> dict:
         "speedup": speedup,
         "speedup_warm": speedup_warm,
         "identical_reports": True,
+        "jit_gate": rep_jit.jit_gate,
+        "gate_probe": gate_probe,
+        "peak_rss_mb": peak_rss_mb,
         "kernel_rounds": stats.get("rounds"),
         "kernel_blocks": stats.get("blocks"),
         "makespan": rep_jit.makespan,
         "p50_latency": rep_jit.p50_latency,
         "p99_latency": rep_jit.p99_latency,
     }
+
+
+#: widened-domain coverage points: each settles one small trace through
+#: the numpy client and the jitted program, asserting bit-identity --
+#: reactive admission, demand-weighted shares and a mixed BASE/RASA chip
+#: all through the same kernel (PR10's domain extensions)
+DOMAIN_POINTS = (
+    ("occupancy", dict(policy="occupancy"), dict()),
+    ("bandwidth", dict(policy="bandwidth"), dict()),
+    ("predicted", dict(policy="predicted"), dict()),
+    ("demand_shares", dict(policy="fixed", batch_size=1),
+     dict(share_policy="demand")),
+    ("hetero_mix", dict(policy="occupancy"),
+     dict(n_cores=None, design=None, cores=("BASE", "RASA-WLBP",
+                                            "RASA-WLBP", "RASA-WLBP"))),
+)
+
+
+def domain_check(n_requests: int) -> dict:
+    """Settle one trace per widened-domain point through both paths;
+    every report pair must be bit-identical and un-gated."""
+    out: dict = {}
+    for name, run_kw, chip_kw in DOMAIN_POINTS:
+        kw = {**CHIP_KW, **chip_kw}
+        chip_np = ChipConfig(**kw)
+        chip_jit = dataclasses.replace(chip_np, backend="jax")
+        requests = synthetic_trace(n_requests, **TRACE_KW)
+        t0 = time.perf_counter()
+        rep_jit = run_batcher(requests, chip_jit, **run_kw)
+        t_jit = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        rep_np = run_batcher(requests, chip_np, **run_kw)
+        t_np = time.perf_counter() - t0
+        assert rep_jit == rep_np, \
+            f"domain point {name!r}: jitted BatchReport differs from " \
+            f"the numpy oracle"
+        assert rep_jit.jit_gate is None, \
+            f"domain point {name!r} unexpectedly gated: {rep_jit.jit_gate}"
+        out[name] = {
+            "n_requests": n_requests,
+            "seconds_numpy": t_np,
+            "seconds_jit_cold": t_jit,
+            "identical_reports": True,
+            "jit_gate": rep_jit.jit_gate,
+            "makespan": rep_jit.makespan,
+        }
+    return out
 
 
 def _drive(sim: OnlineChip, requests, start: int = 0,
@@ -221,6 +299,21 @@ def resume_check(n_requests: int) -> dict:
 def run(n_requests: int, smoke: bool = False,
         resume: bool = False) -> dict:
     jit = jit_check(n_requests, full_scale=n_requests >= N_JIT_FULL)
+    domain = domain_check(min(n_requests, 500))
+
+    # the 100k chunked-window design point: measured when this run is at
+    # scale, otherwise recorded as the contract (floors + RSS bound) so
+    # CI payload validation can gate on it from the smoke run
+    measured_100k = n_requests >= N_JIT_100K
+    scale_100k = {
+        "n_requests": N_JIT_100K,
+        "min_speedup_warm": JIT_MIN_SPEEDUP,
+        "max_rss_mb": JIT_MAX_RSS_MB,
+        "measured": measured_100k,
+    }
+    if measured_100k:
+        scale_100k.update(speedup_warm=jit["speedup_warm"],
+                          peak_rss_mb=jit["peak_rss_mb"])
 
     n_cache = min(n_requests, N_CACHE_FULL)
     requests = synthetic_trace(n_cache, **TRACE_KW)
@@ -247,6 +340,8 @@ def run(n_requests: int, smoke: bool = False,
         "trace": {k: list(v) if isinstance(v, tuple) else v
                   for k, v in TRACE_KW.items()},
         "jit": jit,
+        "domain": domain,
+        "scale_100k": scale_100k,
         "prefix_cache_on": {"seconds": t_on, **stats_on},
         "prefix_cache_off": {"seconds": t_off, **stats_off},
         "speedup": speedup,
@@ -291,7 +386,16 @@ def main(argv=None) -> None:
     print(f"speedup: {j['speedup']:.1f}x cold / {j['speedup_warm']:.1f}x "
           f"warm (identical BatchReport: {j['identical_reports']}; "
           f"{j['kernel_rounds']} relaxation rounds, "
-          f"{j['kernel_blocks']} block replays)")
+          f"{j['kernel_blocks']} block replays; peak RSS "
+          f"{j['peak_rss_mb']:.0f} MB)")
+
+    print(f"\n# widened-domain parity points "
+          f"({next(iter(t['domain'].values()))['n_requests']} requests)")
+    print(f"{'point':<16}{'numpy s':>10}{'jit s':>10}{'identical':>11}")
+    for name, row in t["domain"].items():
+        print(f"{name:<16}{row['seconds_numpy']:>10.2f}"
+              f"{row['seconds_jit_cold']:>10.2f}"
+              f"{str(row['identical_reports']):>11}")
 
     on, off = t["prefix_cache_on"], t["prefix_cache_off"]
     print(f"\n# settled-prefix cache, {t['n_requests']} requests")

@@ -102,6 +102,46 @@ def _check_online_scaling(path) -> list[str]:
                 and jit["speedup_warm"] < 5.0:
             problems.append(f"{path.name}: asserted warm jit speedup "
                             f"{jit['speedup_warm']:.2f} below the 5x floor")
+        # the structured plan-gate reason is the diagnosability contract
+        # of PR10: the headline run must record it (None = served by the
+        # jitted lane) and the out-of-domain probe must name its gate
+        if "jit_gate" not in jit:
+            problems.append(f"{path.name}: jit block missing the "
+                            f"plan-gate reason field 'jit_gate'")
+        if not isinstance(jit.get("gate_probe"), str):
+            problems.append(f"{path.name}: jit block missing the "
+                            f"out-of-domain 'gate_probe' reason")
+    domain = data.get("domain")
+    if not isinstance(domain, dict) or not domain:
+        problems.append(f"{path.name}: missing widened-domain parity "
+                        f"block")
+    else:
+        for name, row in domain.items():
+            if row.get("identical_reports") is not True:
+                problems.append(f"{path.name}: domain point {name!r} "
+                                f"identity not asserted")
+            if "jit_gate" not in row:
+                problems.append(f"{path.name}: domain point {name!r} "
+                                f"missing the plan-gate reason field")
+    s100 = data.get("scale_100k")
+    if not isinstance(s100, dict) or s100.get("n_requests") != 100_000:
+        problems.append(f"{path.name}: missing the 100k-request "
+                        f"chunked-window design point (scale_100k)")
+    else:
+        for k in ("min_speedup_warm", "max_rss_mb", "measured"):
+            if k not in s100:
+                problems.append(f"{path.name}: scale_100k missing {k}")
+        if s100.get("measured"):
+            if not (isinstance(s100.get("speedup_warm"), (int, float))
+                    and s100["speedup_warm"] >= s100["min_speedup_warm"]):
+                problems.append(f"{path.name}: measured 100k speedup "
+                                f"{s100.get('speedup_warm')} below the "
+                                f"{s100.get('min_speedup_warm')}x floor")
+            if not (isinstance(s100.get("peak_rss_mb"), (int, float))
+                    and s100["peak_rss_mb"] <= s100["max_rss_mb"]):
+                problems.append(f"{path.name}: measured 100k peak RSS "
+                                f"{s100.get('peak_rss_mb')} above the "
+                                f"{s100.get('max_rss_mb')} MB bound")
     for blk in ("prefix_cache_on", "prefix_cache_off"):
         if not isinstance(data.get(blk, {}).get("seconds"), (int, float)):
             problems.append(f"{path.name}: missing {blk} timing")

@@ -27,19 +27,13 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import math
-import os
 import time
 from pathlib import Path
 
-# legacy XLA:CPU emitter for the vmapped arbitration demo -- ~8x faster on
-# this program's tiny while-loop bodies, bit-identical results (asserted
-# below); must be set before the first jax import (see online_scaling.py)
-_FLAG = "--xla_cpu_use_thunk_runtime=false"
-if _FLAG.split("=")[0] not in os.environ.get("XLA_FLAGS", ""):
-    os.environ["XLA_FLAGS"] = \
-        (os.environ.get("XLA_FLAGS", "") + " " + _FLAG).strip()
-
-import common  # noqa: F401,E402  -- puts <repo>/src on sys.path
+# importing common first also selects the legacy XLA:CPU emitter for the
+# vmapped arbitration demo (see common.XLA_THUNK_FLAG -- the single
+# documented knob; bit-identical results, asserted below)
+import common  # noqa: F401  -- puts <repo>/src on sys.path
 
 from repro.multicore import ChipConfig, jitarb  # noqa: E402
 from repro.obs import TelemetryConfig, write_trace  # noqa: E402

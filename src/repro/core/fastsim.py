@@ -1038,9 +1038,11 @@ def _sim_chunk_fn(port_model: bool, emit_ends: bool = False):
 
 
 #: bucket in_axes of the two vmap layouts below (and of
-#: ``multicore.jitarb``'s in-program lane vmap, which must mirror
-#: ``_B_CORES``): the cores layout maps shares / n_shares / tail /
-#: sched_end per lane, everything else is shared.
+#: ``multicore.jitarb``'s in-program lane vmap ``_B_LANES``, which
+#: extends ``_B_CORES`` by also mapping inv_load / inv_store per lane so
+#: heterogeneous core mixes trace through one program): the cores layout
+#: maps shares / n_shares / tail / sched_end per lane, everything else
+#: is shared.
 _B_SWEEP = ((None,) * 9) + (0,)          # bucket: inv_load per design
 _B_CORES = (0, 0, None, 0, None, 0) + ((None,) * 4)
 

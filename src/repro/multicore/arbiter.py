@@ -298,23 +298,44 @@ class SpanArbiter:
         from epoch 0, every round -- kept as the measured baseline of
         ``benchmarks/online_scaling.py`` (same values, quadratically more
         work on long traces).
+
+        Measured-weight policies (``needs_demand``) always use the fresh
+        per-epoch fold, in span-list order, even with the prefix cache on:
+        the difference-array running sum accumulates float weights in
+        span-*event* order with ``+w``/``-w`` cancellations, which is not
+        bit-reproducible by any fixed-order reduction (and therefore not
+        by the jitted whole-trace program, ``repro.multicore.jitarb``).
+        The fold keeps ``prefix_cache`` on/off and jitted/incremental all
+        bit-identical; equal shares keep the O(spans + width) sweep (unit
+        weights make the running sum exact in any order).
         """
         horizon = d
         for s in spans:
             if s.demands and s.end is not None and s.end > horizon:
                 horizon = s.end
-        if not self.prefix_cache:
-            wsum, nact = [], []
-            for e in range(horizon):
+
+        def fold(lo: int, hi: int) -> None:
+            for e in range(lo, hi):
                 w, n = 0.0, 0
                 for s in spans:
                     if s.demands and s.start <= e and (s.end is None
                                                        or s.end > e):
                         w += s.weight
                         n += 1
-                wsum.append(w)
-                nact.append(n)
-            self._wsum, self._nact = wsum, nact
+                self._wsum.append(w)
+                self._nact.append(n)
+
+        if not self.prefix_cache:
+            self._wsum, self._nact = [], []
+            fold(0, horizon)
+            return
+        if self.policy.needs_demand:
+            del self._wsum[d:]
+            del self._nact[d:]
+            while len(self._wsum) < d:
+                self._wsum.append(0.0)
+                self._nact.append(0)
+            fold(d, horizon)
             return
         width = horizon - d
         dw = [0.0] * (width + 1)

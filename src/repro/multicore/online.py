@@ -58,6 +58,12 @@ admission policies query :meth:`OnlineChip.core_busy` /
 :meth:`OnlineChip.live_share` / :meth:`OnlineChip.free_at_estimate` at
 every decision epoch and inject admitted requests with
 :meth:`OnlineChip.submit`.
+
+:mod:`repro.multicore.jitarb` mirrors this entire client -- event loop,
+admission decisions, demand-weighted shares, heterogeneous lanes,
+settled-prefix window -- as ONE jitted ``lax.while_loop`` program on
+fault-free chips, bit-identical on its domain (``Plan``-gated; the
+incremental client here remains the oracle and the fallback).
 """
 
 from __future__ import annotations

@@ -288,6 +288,11 @@ class BatchReport:
     #: ``telemetry=TelemetryConfig(enabled=True)``; excluded from equality
     #: (reports with and without telemetry compare by the numbers above)
     telemetry: object | None = dataclasses.field(default=None, compare=False)
+    #: why a ``backend="jax"`` run fell back to the incremental client
+    #: (one of ``repro.multicore.jitarb.GATE_REASONS``) -- ``None`` when
+    #: the run took the jitted whole-trace path or never tried it;
+    #: diagnostic only, excluded from equality like ``telemetry``
+    jit_gate: str | None = dataclasses.field(default=None, compare=False)
 
     @property
     def attribution(self):
@@ -714,38 +719,54 @@ def run_batcher(requests: Sequence[ServeRequest],
     names = [r.name for r in requests]
     if len(set(names)) != len(names):
         raise ValueError("request names must be unique")
-    if (policy == "fixed" and batch_size == 1 and prefix_cache
-            and not telemetry.enabled and chip.backend == "jax"
+    jit_gate = None
+    if (prefix_cache and not telemetry.enabled and chip.backend == "jax"
             and requests and all(r.deadline is None for r in requests)):
         # whole-trace fast lane: one jitted program replays the full
-        # arbitration (see repro.multicore.jitarb; bit-identical to the
-        # incremental client, pinned by tests/test_online_jax.py)
+        # arbitration -- admission decisions included (see
+        # repro.multicore.jitarb; bit-identical to the incremental
+        # client, pinned by tests/test_online_jax.py).  plan_ex gates
+        # and explains configurations the program cannot replay.
         from ..multicore import jitarb
-        plan = jitarb.plan([(r.arrival_epoch, r.specs) for r in requests],
-                           chip)
+        plan, jit_gate = jitarb.plan_ex(
+            [(r.arrival_epoch, r.specs) for r in requests], chip,
+            policy=policy, batch_size=batch_size, min_share=min_share,
+            lookahead=lookahead)
         if plan is not None:
-            return report_from_finishes(requests, chip,
-                                        jitarb.finish_times(plan))
-    return _Batcher(requests, chip, policy, batch_size, min_share,
-                    snap_stride, lookahead, prefix_cache, telemetry,
-                    max_attempts, backoff_epochs, max_prefills).run()
+            fins, adm = jitarb.finish_admit_times(plan)
+            return report_from_finishes(requests, chip, fins,
+                                        policy=policy, admit_epochs=adm)
+    report = _Batcher(requests, chip, policy, batch_size, min_share,
+                      snap_stride, lookahead, prefix_cache, telemetry,
+                      max_attempts, backoff_epochs, max_prefills).run()
+    if jit_gate is not None:
+        report = dataclasses.replace(report, jit_gate=jit_gate)
+    return report
 
 
 def report_from_finishes(requests: Sequence[ServeRequest],
                          chip: ChipConfig,
-                         finishes: Sequence[float]) -> BatchReport:
-    """Assemble the ``fixed``-policy :class:`BatchReport` from absolute
-    finish cycles in caller order -- the jitted whole-trace arbitration
-    (:mod:`repro.multicore.jitarb`) returns only those, and every other
-    report field is a closed form of the inputs on its domain (no
-    deadlines: every request is admitted at its arrival epoch and served
-    within deadline by definition)."""
+                         finishes: Sequence[float], *,
+                         policy: str = "fixed",
+                         admit_epochs: Sequence[float] | None = None
+                         ) -> BatchReport:
+    """Assemble a :class:`BatchReport` from absolute finish cycles in
+    caller order -- the jitted whole-trace arbitration
+    (:mod:`repro.multicore.jitarb`) returns finish cycles and admit
+    epochs, and every other report field is a closed form of the inputs
+    on its domain (no deadlines: every request is served within deadline
+    by definition, and under ``fixed``@1 admission -- the default when
+    ``admit_epochs`` is omitted -- each is admitted at its arrival)."""
     E = chip.epoch_cycles
     fins = tuple(float(f) for f in finishes)
     first = min((r.arrival_epoch for r in requests), default=0) * E
     macs = sum(r.macs for r in requests)
+    if admit_epochs is None:
+        admit_epochs = tuple(r.arrival_epoch for r in requests)
+    else:
+        admit_epochs = tuple(float(a) for a in admit_epochs)
     return BatchReport(
-        policy="fixed",
+        policy=policy,
         design=chip.design_name,
         n_cores=chip.n_cores,
         n_requests=len(requests),
@@ -756,7 +777,7 @@ def report_from_finishes(requests: Sequence[ServeRequest],
                         for r, f in zip(requests, fins)),
         finish_times=fins,
         arrival_epochs=tuple(r.arrival_epoch for r in requests),
-        admit_epochs=tuple(r.arrival_epoch for r in requests),
+        admit_epochs=tuple(admit_epochs),
         macs=macs,
         deadline_miss_rate=0.0,
         retries=0,
